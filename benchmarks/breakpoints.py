@@ -1,0 +1,86 @@
+"""Break-point analyzer for the fig3 robustness grids.
+
+Reads the fig3 CSV rows (from a bench_output.txt or stdin) and computes, per
+(dataset, budget, bits, scope, method), the break point
+
+    p* = max { p : accuracy(p) >= accuracy(0) - drop }
+
+plus the LogHD/SparseHD p* ratio — the quantity behind the paper's
+"sustains target accuracy at 2.5-3.0x higher bit-flip rates" claim (C2).
+
+    PYTHONPATH=src python -m benchmarks.breakpoints bench_output.txt
+"""
+
+from __future__ import annotations
+
+import collections
+import sys
+
+
+def parse_fig3(lines):
+    rows = []
+    for ln in lines:
+        parts = ln.strip().split(",")
+        if len(parts) != 7:
+            continue
+        ds, budget, bits, scope, method, p, acc = parts
+        try:
+            rows.append((ds, float(budget), int(bits), scope, method,
+                         float(p), float(acc)))
+        except ValueError:
+            continue
+    return rows
+
+
+def breakpoints(rows, drop: float = 0.10):
+    curves = collections.defaultdict(dict)
+    for ds, budget, bits, scope, method, p, acc in rows:
+        curves[(ds, budget, bits, scope, method)][p] = acc
+    out = {}
+    for key, curve in curves.items():
+        if 0.0 not in curve:
+            continue
+        target = curve[0.0] - drop
+        ok = [p for p, a in sorted(curve.items()) if a >= target]
+        # p* = largest p with accuracy above target AND no earlier failure
+        pstar = 0.0
+        for p, a in sorted(curve.items()):
+            if a >= target:
+                pstar = p
+            else:
+                break
+        out[key] = (curve[0.0], pstar)
+    return out
+
+
+def ratios(bps):
+    """LogHD(best of k) vs SparseHD p* ratio per (ds, budget, bits, scope)."""
+    table = []
+    cells = collections.defaultdict(dict)
+    for (ds, budget, bits, scope, method), (clean, pstar) in bps.items():
+        cells[(ds, budget, bits, scope)][method] = pstar
+    for cell, methods in sorted(cells.items()):
+        log = max((v for k, v in methods.items() if k.startswith("loghd")),
+                  default=None)
+        sp = methods.get("sparsehd")
+        if log is None or sp is None:
+            continue
+        ratio = log / sp if sp > 0 else float("inf") if log > 0 else 1.0
+        table.append((*cell, log, sp, round(ratio, 2)))
+    return table
+
+
+def main(path: str | None = None):
+    lines = open(path).readlines() if path else sys.stdin.readlines()
+    rows = parse_fig3(lines)
+    if not rows:
+        print("no fig3 rows found", file=sys.stderr)
+        return
+    bps = breakpoints(rows)
+    print("dataset,budget,bits,scope,pstar_loghd,pstar_sparsehd,ratio")
+    for row in ratios(bps):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,87 @@
+"""Shared benchmark fixtures: trained models per dataset, timed helpers."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import HybridConfig, fit_hybrid
+from repro.core.loghd import LogHDConfig, fit_loghd
+from repro.core.sparsehd import SparseHDConfig, fit_sparsehd
+from repro.data.synth import load_dataset
+from repro.hdc.conventional import class_prototypes
+from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
+
+D_DEFAULT = 10_000
+MAX_TRAIN = 4000      # cap for bench runtime on the 1-core CPU container
+MAX_TEST = 1000
+
+
+@functools.lru_cache(maxsize=8)
+def dataset_fixture(name: str, dim: int = D_DEFAULT):
+    """Encode a dataset once; returns dict with enc, h, protos, test split."""
+    x_tr, y_tr, x_te, y_te, spec = load_dataset(name, max_train=MAX_TRAIN,
+                                                max_test=MAX_TEST)
+    enc_cfg = EncoderConfig(spec.n_features, dim, "cos")
+    enc, h_tr = fit_encoder(enc_cfg, jnp.asarray(x_tr))
+    h_te = encode_batched(enc, jnp.asarray(x_te), "cos")
+    protos = class_prototypes(h_tr, jnp.asarray(y_tr), spec.n_classes)
+    return {"spec": spec, "enc_cfg": enc_cfg, "enc": enc,
+            "x_tr": jnp.asarray(x_tr), "y_tr": jnp.asarray(y_tr),
+            "h_tr": h_tr, "h_te": h_te, "y_te": np.asarray(y_te),
+            "protos": protos}
+
+
+def loghd_for_budget(fx, budget: float, k: int = 2, refine: int = 50,
+                     codebook: str = "distance"):
+    """n = floor(budget * C) bundles (paper budget accounting: n*D words)."""
+    spec = fx["spec"]
+    from repro.core.codebook import min_bundles
+    n_min = min_bundles(spec.n_classes, k)
+    n = max(n_min, int(budget * spec.n_classes))
+    cfg = LogHDConfig(n_classes=spec.n_classes, k=k,
+                      extra_bundles=n - n_min, refine_epochs=refine,
+                      refine_batch=64, codebook_method=codebook)
+    model = fit_loghd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
+                      prototypes=fx["protos"], enc=fx["enc"],
+                      encoded=fx["h_tr"])
+    return cfg, model
+
+
+def sparsehd_for_budget(fx, budget: float, retrain: int = 30):
+    spec = fx["spec"]
+    cfg = SparseHDConfig(n_classes=spec.n_classes, sparsity=1.0 - budget,
+                         retrain_epochs=retrain)
+    model = fit_sparsehd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
+                         prototypes=fx["protos"], enc=fx["enc"],
+                         encoded=fx["h_tr"])
+    return cfg, model
+
+
+def hybrid_for_budget(fx, budget: float, k: int = 2, refine: int = 50):
+    """n bundles at 2x the budget, then sparsify dims to land on budget."""
+    spec = fx["spec"]
+    from repro.core.codebook import min_bundles
+    n_min = min_bundles(spec.n_classes, k)
+    n = max(n_min, int(2 * budget * spec.n_classes))
+    lcfg = LogHDConfig(n_classes=spec.n_classes, k=k,
+                       extra_bundles=n - n_min, refine_epochs=refine,
+                       refine_batch=64, codebook_method="distance")
+    sparsity = 1.0 - (budget * spec.n_classes) / n
+    cfg = HybridConfig(loghd=lcfg, sparsity=float(np.clip(sparsity, 0, 0.95)))
+    model = fit_hybrid(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
+                       encoded=fx["h_tr"])
+    return cfg, model
+
+
+def timed(fn, *args, iters: int = 20, warmup: int = 3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us/call

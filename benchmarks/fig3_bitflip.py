@@ -1,0 +1,70 @@
+"""Fig. 3 reproduction: accuracy vs bit-flip probability p at matched
+model-size budgets, across datasets — SparseHD vs LogHD (k in {2,3}) vs
+Hybrid.
+
+Reports BOTH fault scopes (DESIGN.md / EXPERIMENTS.md §Paper-claims):
+  all — flips on bundles/prototypes AND activation profiles (paper text)
+  hv  — flips on the bulk hypervector memory only (profiles in ECC side
+        storage; isolates the paper's D-preservation mechanism)
+
+CSV rows: dataset,budget,bits,scope,method,p,accuracy
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (dataset_fixture, hybrid_for_budget,
+                               loghd_for_budget, sparsehd_for_budget)
+from repro.core.evaluate import evaluate_under_flips
+from repro.core.hybrid import predict_hybrid_encoded
+from repro.core.loghd import predict_loghd_encoded
+from repro.core.sparsehd import predict_sparsehd_encoded
+
+P_GRID = [0.0, 0.01, 0.02, 0.05, 0.1, 0.15, 0.2, 0.3, 0.4]
+BUDGETS = [0.2, 0.4]
+DATASETS = ["isolet", "ucihar", "pamap2", "page"]
+
+
+def run(bits: int = 4, datasets=None, budgets=None, trials: int = 2,
+        quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    datasets = datasets or (DATASETS[:2] if quick else DATASETS)
+    budgets = budgets or BUDGETS
+    p_grid = P_GRID[:8] if quick else P_GRID  # quick: p up to 0.3
+    for ds in datasets:
+        fx = dataset_fixture(ds)
+        for budget in budgets:
+            methods = []
+            for k in (2, 3):
+                try:
+                    cfg, m = loghd_for_budget(fx, budget, k=k)
+                    methods.append((f"loghd_k{k}", m, "loghd",
+                                    predict_loghd_encoded))
+                except ValueError:
+                    pass  # infeasible: budget below ceil(log_k C)/C floor
+            _, sm = sparsehd_for_budget(fx, budget)
+            methods.append(("sparsehd", sm, "sparsehd",
+                            predict_sparsehd_encoded))
+            _, hm = hybrid_for_budget(fx, budget)
+            methods.append(("hybrid", hm, "hybrid", predict_hybrid_encoded))
+            for scope in ("all", "hv"):
+                for name, model, kind, pred in methods:
+                    for p in p_grid:
+                        acc = evaluate_under_flips(
+                            model, kind, bits, p, pred, fx["h_te"],
+                            fx["y_te"], key, trials, scope)
+                        rows.append((ds, budget, bits, scope, name, p, acc))
+    return rows
+
+
+def main(quick: bool = False):
+    print("dataset,budget,bits,scope,method,p,accuracy")
+    for r in run(quick=quick):
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference.
+
+On this CPU container the interpret-mode timing is NOT indicative of TPU
+performance — the purpose here is (a) a correctness spot check at bench
+shapes and (b) derived VMEM/roofline numbers per kernel invocation, which
+ARE meaningful (they depend only on tile geometry).
+
+CSV rows: kernel,shape,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels.bundle_sim.ops import bundle_similarity
+from repro.kernels.bundle_sim.ref import bundle_similarity_ref
+from repro.kernels.profile_decode.ops import profile_decode_scores
+from repro.kernels.profile_decode.ref import profile_decode_scores_ref
+from repro.kernels.loghd_head.ops import loghd_head_logits
+from repro.kernels.loghd_head.ref import loghd_head_logits_ref
+
+
+def _vmem_bundle_sim(bm, bd, n):
+    return (bm * bd * 4 + max(n, 128) * bd * 4 + bm * (max(n, 128) + 1) * 4) / 2**20
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # bundle_sim at the paper's scale
+    b, d, n = (64, 10_000, 6) if quick else (256, 10_000, 10)
+    h = jax.random.normal(key, (b, d))
+    m = jax.random.normal(key, (n, d))
+    m = m / jnp.linalg.norm(m, axis=-1, keepdims=True)
+    got = bundle_similarity(h, m, interpret=True)
+    np.testing.assert_allclose(got, bundle_similarity_ref(h, m), rtol=1e-4,
+                               atol=1e-5)
+    us_ref = timed(jax.jit(bundle_similarity_ref), h, m, iters=5)
+    rows.append(("bundle_sim_ref_jnp", f"B{b}xD{d}xn{n}", us_ref,
+                 f"vmem_per_step={_vmem_bundle_sim(256, 512, 128):.2f}MiB"))
+
+    # profile_decode at classifier + vocab scale
+    for c in ([26] if quick else [26, 151_936]):
+        a = jax.random.normal(key, (b, n))
+        p = jax.random.normal(key, (c, n))
+        got = profile_decode_scores(a, p, interpret=True)
+        np.testing.assert_allclose(got, profile_decode_scores_ref(a, p),
+                                   rtol=1e-4, atol=1e-4)
+        us = timed(jax.jit(profile_decode_scores_ref), a, p, iters=5)
+        rows.append(("profile_decode_ref_jnp", f"B{b}xn{n}xC{c}", us,
+                     "expanded-matmul decode"))
+
+    # loghd_head: FLOP saving vs dense head
+    dmod, v = 2048, 151_936
+    n_h = 20
+    flops_dense = 2 * dmod * v
+    flops_loghd = 2 * dmod * n_h + 2 * n_h * v
+    rows.append(("loghd_head_flops_per_token", f"D{dmod}xV{v}xn{n_h}",
+                 0.0, f"dense/loghd={flops_dense/flops_loghd:.1f}x"))
+    return rows
+
+
+def main(quick: bool = False):
+    print("kernel,shape,us_per_call,derived")
+    for r in run(quick=quick):
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  fig3_bitflip       — Fig. 3: accuracy vs flip prob at matched budgets
+  fig4_dim_quant     — Fig. 4: D x precision sensitivity (UCIHAR)
+  fig5_alphabet      — Fig. 5: alphabet size k sweep
+  fig6_hybrid        — Fig. 6: hybrid n x sparsity heatmap
+  table2_efficiency  — Table II: modeled ASIC/CPU/GPU efficiency ratios
+  kernels_bench      — Pallas kernel spot checks + derived numbers
+
+`python -m benchmarks.run` runs the QUICK suite (the 1-core CPU container
+cannot finish the full grids in reasonable time); `--full` runs everything.
+Full CSVs land on stdout; EXPERIMENTS.md records a curated full run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig3_bitflip, fig4_dim_quant, fig5_alphabet,
+                            fig6_hybrid, kernels_bench, table2_efficiency)
+    suites = {
+        "table2": table2_efficiency,
+        "kernels": kernels_bench,
+        "fig5": fig5_alphabet,
+        "fig4": fig4_dim_quant,
+        "fig6": fig6_hybrid,
+        "fig3": fig3_bitflip,
+    }
+    for name, mod in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# ==== {name} ({mod.__name__}) ====", flush=True)
+        if name == "fig3":
+            # run once, print the grid AND the derived break-point table
+            rows = mod.run(quick=quick)
+            print("dataset,budget,bits,scope,method,p,accuracy")
+            for r in rows:
+                print(",".join(str(x) for x in r))
+            from benchmarks.breakpoints import breakpoints, ratios
+            bps = breakpoints([tuple(r) for r in rows])
+            print("# ---- break points (p* at clean-10pts; C2 ratio) ----")
+            print("dataset,budget,bits,scope,pstar_loghd,pstar_sparsehd,ratio")
+            for row in ratios(bps):
+                print(",".join(str(x) for x in row))
+        else:
+            mod.main(quick=quick)
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

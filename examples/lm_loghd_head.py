@@ -1,0 +1,67 @@
+"""The paper's technique as an LM-head compressor: train a small decoder LM
+with the standard dense unembedding vs the LogHD head (bundles + vocab
+profiles) and compare loss trajectories + head sizes.
+
+    PYTHONPATH=src python examples/lm_loghd_head.py [--steps 60]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.models.model import init_params, loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def train(cfg, steps: int, seed: int = 0):
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=128, global_batch=8,
+                         seed=seed)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.01)
+    opt = adamw_init(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, batch["tokens"], batch["targets"])
+        opt, params = adamw_update(opt, params, grads, opt_cfg)
+        return params, opt, loss
+
+    losses = []
+    for i in range(steps):
+        params, opt, loss = step(params, opt, pipe.batch(i))
+        losses.append(float(loss))
+    return losses, params
+
+
+def head_words(cfg):
+    if cfg.head == "dense":
+        return cfg.d_model * cfg.vocab
+    n = cfg.loghd_bundles
+    return n * cfg.d_model + cfg.vocab * n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    base = dataclasses.replace(get_smoke_config("qwen3-1.7b"), vocab=2048,
+                               d_model=128, n_periods=2)
+    for head in ("dense", "loghd"):
+        cfg = dataclasses.replace(base, head=head, loghd_extra=4)
+        losses, _ = train(cfg, args.steps)
+        hw = head_words(cfg)
+        print(f"head={head:<6} params={hw/1e3:8.1f}k  "
+              f"loss[0]={losses[0]:.3f}  loss[-5:]="
+              f"{[round(l, 3) for l in losses[-5:]]}")
+    print("\nNote: decode-step head FLOPs drop from 2*D*V to 2*D*n + 2*n*V "
+          "— see benchmarks/kernels_bench.py and EXPERIMENTS.md §Perf.")
+
+
+if __name__ == "__main__":
+    main()

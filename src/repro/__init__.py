@@ -1,0 +1,20 @@
+"""repro — LogHD: Robust Compression of Hyperdimensional Classifiers via
+Logarithmic Class-Axis Reduction, built as a production-grade JAX framework.
+
+Layout:
+  core/      — the paper's contribution: codebook, bundling, profiles,
+               refinement, LogHD / SparseHD / Hybrid classifiers, quantization,
+               bit-flip fault injection, and the LogHD LM head.
+  hdc/       — HDC substrate: encoders, conventional prototype classifier,
+               distributed (pjit) HDC pipeline.
+  kernels/   — Pallas TPU kernels for the ASIC-accelerated hot spots.
+  models/    — the 10 assigned LM architectures (dense/GQA/MLA/MoE/SSM/hybrid).
+  data/      — synthetic dataset surrogates + deterministic LM token pipeline.
+  optim/     — AdamW (fp32/int8 moments), schedules, gradient compression.
+  checkpoint/— sharded, async, atomic, elastic checkpointing.
+  runtime/   — train/serve loops with restart + straggler watchdog.
+  launch/    — production meshes, multi-pod dry-run, roofline, train/serve CLIs.
+  configs/   — one config per assigned architecture + paper HDC settings.
+"""
+
+__version__ = "1.0.0"

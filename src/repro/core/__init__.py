@@ -1,0 +1,28 @@
+"""The paper's primary contribution: LogHD class-axis compression.
+
+Submodules:
+  codebook   — capacity-aware k-ary codebook (Eq. 2-3)
+  bundling   — weighted superposition + perceptron refinement (Eq. 4, 8-9)
+  profiles   — activation vectors + per-class profiles + decode (Eq. 5-7)
+  loghd      — end-to-end LogHD classifier (Algorithm 1)
+  sparsehd   — feature-axis baseline (SparseHD)
+  hybrid     — class-axis + feature-axis composition
+  quantize   — QuantHD-style post-training quantization (1/2/4/8 bit)
+  faults     — stored-bit flip injection (exact integer-code semantics)
+  evaluate   — quantize -> flip -> predict harness
+  lm_head    — LogHD as a vocab-scale LM classification head
+"""
+
+from repro.core.codebook import build_codebook, bundle_loads, min_bundles
+from repro.core.bundling import build_bundles, refine_bundles, symbol_targets
+from repro.core.profiles import (activations, decode_profiles,
+                                 estimate_profiles, profile_scores)
+from repro.core.loghd import (LogHDConfig, fit_loghd, predict_loghd,
+                              predict_loghd_encoded, memory_bits,
+                              max_bundles_for_budget)
+from repro.core.sparsehd import (SparseHDConfig, fit_sparsehd,
+                                 predict_sparsehd, predict_sparsehd_encoded,
+                                 sparsity_for_budget)
+from repro.core.hybrid import HybridConfig, fit_hybrid, predict_hybrid
+from repro.core.quantize import QTensor, dequantize, quantize
+from repro.core.faults import corrupt_model, flip_bits_f32, flip_bits_int

@@ -1,0 +1,101 @@
+"""Bundle construction and iterative refinement (paper Sec. III-C, III-F).
+
+Bundles are weighted superpositions of class prototypes,
+    M_j = sum_i g(B_ij) * H_i                                  (Eq. 4)
+followed by L2 normalization.  Refinement nudges bundles so that observed
+activations A_j = cos(M_j, phi(x)) move toward the code-implied targets
+    t(s) = 2 s/(k-1) - 1                                       (Eq. 8)
+with the perceptron-style correction
+    M_j <- M_j + eta * (t(B_yj) - A_j) * phi(x)                (Eq. 9)
+and re-normalization after each update (Sec. III-H).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codebook import symbol_weight
+
+
+def _l2n(v, axis=-1, eps=1e-12):
+    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
+
+
+def build_bundles(prototypes: jax.Array, codebook: jax.Array, k: int,
+                  normalize: bool = True, bipolar: bool = False) -> jax.Array:
+    """M_j = sum_i g(B_ij) H_i : (C, D), (C, n) -> (n, D).
+
+    bipolar=False is Eq. 4 verbatim (weights g(s) = s/(k-1) in [0, 1]).
+    bipolar=True uses the refinement TARGETS t(s) = 2g(s) - 1 in [-1, 1]
+    (Eq. 8) as the superposition weights instead.  This is the fixed point
+    the paper's Eq. 9 refinement drives the bundles toward (out-of-bundle
+    classes are pushed to activation -1, i.e. negative membership): it makes
+    the activation profiles bipolar from step 0, which (a) accelerates
+    refinement and (b) makes the stored profiles sign-robust under low-bit
+    quantization and bit flips.  Beyond-paper initialization; default off.
+    """
+    g = symbol_weight(jnp.asarray(codebook), k)          # (C, n)
+    if bipolar:
+        g = 2.0 * g - 1.0
+    m = jnp.einsum("cn,cd->nd", g, prototypes)
+    return _l2n(m) if normalize else m
+
+
+def symbol_targets(codebook: jax.Array, k: int) -> jax.Array:
+    """t(B) = 2 g(B) - 1 in [-1, 1]: (C, n) float targets per class/bundle."""
+    return 2.0 * symbol_weight(jnp.asarray(codebook), k) - 1.0
+
+
+def refine_step(bundles: jax.Array, h: jax.Array, targets_y: jax.Array,
+                lr: float) -> jax.Array:
+    """One (mini)batched Eq. 9 update.
+
+    Args:
+      bundles:   (n, D) current bundles (assumed L2-normalized).
+      h:         (B, D) encoded, L2-normalized queries phi(x).
+      targets_y: (B, n) code-implied targets t(B_y) for each example's class.
+      lr:        eta.
+    Returns:
+      (n, D) updated, re-normalized bundles.
+    """
+    acts = h @ bundles.T                                 # (B, n) cosine sims
+    err = targets_y - acts                               # (B, n)
+    delta = jnp.einsum("bn,bd->nd", err, h) * lr
+    return _l2n(bundles + delta)
+
+
+def refine_bundles(bundles: jax.Array, h: jax.Array, y: jax.Array,
+                   codebook: jax.Array, k: int, *, epochs: int,
+                   lr: float, batch_size: int = 1, seed: int = 0) -> jax.Array:
+    """Run T epochs of Eq. 9 over a randomly ordered training set.
+
+    batch_size=1 reproduces the paper's per-example update exactly
+    (Algorithm 1, step 5); larger batches are a standard minibatch
+    generalisation used for throughput on long datasets.
+    """
+    if epochs <= 0:
+        return bundles
+    targets = symbol_targets(codebook, k)                # (C, n)
+    n = h.shape[0]
+    bs = max(1, min(batch_size, n))
+    n_batches = max(n // bs, 1)
+    usable = n_batches * bs
+    key = jax.random.PRNGKey(seed)
+
+    def epoch(bundles, key):
+        perm = jax.random.permutation(key, n)[:usable]
+        hb = h[perm].reshape(n_batches, bs, -1)
+        tb = targets[y[perm]].reshape(n_batches, bs, -1)
+
+        def step(m, batch):
+            hh, tt = batch
+            return refine_step(m, hh, tt, lr), None
+
+        bundles, _ = jax.lax.scan(step, bundles, (hb, tb))
+        return bundles
+
+    keys = jax.random.split(key, epochs)
+    for e in range(epochs):
+        bundles = epoch(bundles, keys[e])
+    return bundles

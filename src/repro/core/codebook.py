@@ -1,0 +1,229 @@
+"""Capacity-aware k-ary codebook construction (paper Sec. III-C, Eq. 2-3).
+
+Each class c receives a unique length-n code B_c in {0..k-1}^n.  The code
+prescribes how strongly prototype H_c contributes to each bundle M_j, via the
+symbol weight g(s) = s/(k-1).  To avoid over-capacity bundles, codes are
+chosen greedily to minimise the worst-case updated load
+
+    s* = argmin_s  max_j ( L_j + U(g(s_j)) ) + eps * xi,      (Eq. 2)
+
+with capacity surrogate U(w) = w^alpha and uniform tie-break noise xi.  The
+greedy selection is a relaxation of the fair-distribution objective (Eq. 3).
+
+Scalability: the paper's workloads have C <= 26 and k^n <= a few hundred, but
+this framework also uses codebooks at vocabulary scale (C ~ 152k classes for
+the LogHD LM head).  Three construction methods are provided:
+
+  * "greedy"     — the paper's Eq. 2, vectorised over the candidate pool and
+                   run as a lax.fori_loop (exact for moderate C * |Q|).
+  * "stratified" — O(k^n log k^n): snake-assign codes ordered by total load
+                   contribution; used when C is a large fraction of k^n where
+                   any unique assignment is near-balanced.
+  * "auto"       — greedy when C * |Q| is affordable, else stratified.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def min_bundles(n_classes: int, k: int) -> int:
+    """ceil(log_k C): feasibility limit for the number of bundles."""
+    if n_classes <= 1:
+        return 1
+    return max(1, math.ceil(math.log(n_classes) / math.log(k)))
+
+
+def symbol_weight(s: jax.Array, k: int) -> jax.Array:
+    """g(s) = s / (k-1), mapping symbols to contribution strengths in [0,1]."""
+    return s.astype(jnp.float32) / float(k - 1)
+
+
+def capacity(w: jax.Array, alpha: float) -> jax.Array:
+    """U(w) = w^alpha, the nondecreasing capacity surrogate."""
+    return jnp.power(w, alpha)
+
+
+def _all_codes(k: int, n: int) -> np.ndarray:
+    """Enumerate all k^n codes as an (k^n, n) int32 array (most-significant
+    symbol first)."""
+    idx = np.arange(k ** n, dtype=np.int64)
+    out = np.empty((k ** n, n), dtype=np.int32)
+    for j in range(n - 1, -1, -1):
+        out[:, j] = idx % k
+        idx //= k
+    return out
+
+
+def _candidate_pool(k: int, n: int, pool_size: int, seed: int) -> np.ndarray:
+    """Unique candidate codes.  Full enumeration when k^n is moderate;
+    otherwise a sizable random pool (paper Sec. III-C: 'when k^n is large we
+    draw a sizable random candidate pool')."""
+    total = k ** n
+    if total <= pool_size:
+        return _all_codes(k, n)
+    rng = np.random.default_rng(seed)
+    # sample unique code indices without materialising k^n entries
+    picks = set()
+    while len(picks) < pool_size:
+        picks.update(rng.integers(0, total, size=pool_size - len(picks)).tolist())
+    idx = np.fromiter(picks, dtype=np.int64, count=pool_size)
+    out = np.empty((pool_size, n), dtype=np.int32)
+    for j in range(n - 1, -1, -1):
+        out[:, j] = idx % k
+        idx //= k
+    return out
+
+
+def _greedy_select(pool: np.ndarray, n_classes: int, k: int, alpha: float,
+                   eps: float, seed: int) -> np.ndarray:
+    """Vectorised Eq. 2 greedy over the candidate pool, as a jax loop.
+
+    State: per-bundle loads L (n,), per-candidate used mask (Q,).
+    Each step picks argmin over unused candidates of
+        max_j (L_j + U(g(s_j))) + eps * xi.
+    """
+    pool_j = jnp.asarray(pool)                                   # (Q, n) int32
+    u_pool = capacity(symbol_weight(pool_j, k), alpha)           # (Q, n) f32
+    q = pool.shape[0]
+    key = jax.random.PRNGKey(seed)
+    xi = jax.random.uniform(key, (n_classes, q))                 # tie-break draws
+
+    def body(c, state):
+        loads, used, chosen = state
+        cand_max = jnp.max(loads[None, :] + u_pool, axis=1)      # (Q,)
+        score = cand_max + eps * xi[c]
+        score = jnp.where(used, jnp.inf, score)
+        pick = jnp.argmin(score)
+        loads = loads + u_pool[pick]
+        used = used.at[pick].set(True)
+        chosen = chosen.at[c].set(pick)
+        return loads, used, chosen
+
+    loads0 = jnp.zeros((pool.shape[1],), jnp.float32)
+    used0 = jnp.zeros((q,), bool)
+    chosen0 = jnp.zeros((n_classes,), jnp.int32)
+    _, _, chosen = jax.lax.fori_loop(0, n_classes, body,
+                                     (loads0, used0, chosen0))
+    return np.asarray(pool_j[chosen])
+
+
+def _distance_select(pool: np.ndarray, n_classes: int, k: int, alpha: float,
+                     eps: float, seed: int) -> np.ndarray:
+    """Beyond-paper codebook: greedy max-min-Hamming-distance selection with
+    the paper's minimax-load criterion as tie-breaker.
+
+    Rationale (EXPERIMENTS.md 'profile corruption'): under bit flips, one
+    corrupted profile coordinate costs one unit of code distance, so the
+    decode's fault tolerance is ~ (d_min - 1) / 2 coordinates.  The paper's
+    load-only greedy tends to pick low-weight codes first, giving d_min = 1;
+    maximizing d_min directly buys error-correction capacity at identical
+    memory cost.  Load balance is preserved as the secondary objective.
+    """
+    rng = np.random.default_rng(seed)
+    q = pool.shape[0]
+    u_pool = ((pool.astype(np.float64) / (k - 1)) ** alpha)       # (Q, n)
+    chosen_idx = [int(rng.integers(q))]
+    dmin = (pool != pool[chosen_idx[0]]).sum(axis=1)              # (Q,)
+    loads = u_pool[chosen_idx[0]].copy()
+    used = np.zeros(q, bool)
+    used[chosen_idx[0]] = True
+    for _ in range(n_classes - 1):
+        cand_load = (loads[None, :] + u_pool).max(axis=1)         # (Q,)
+        # lexicographic: max dmin, then min worst-load, then noise
+        score = (dmin.astype(np.float64) * 1e6 - cand_load
+                 + eps * rng.random(q))
+        score[used] = -np.inf
+        pick = int(np.argmax(score))
+        chosen_idx.append(pick)
+        used[pick] = True
+        loads += u_pool[pick]
+        dmin = np.minimum(dmin, (pool != pool[pick]).sum(axis=1))
+    return pool[np.array(chosen_idx)]
+
+
+def _stratified_select(pool: np.ndarray, n_classes: int, k: int,
+                       alpha: float, seed: int) -> np.ndarray:
+    """Near-balanced assignment for large C: order codes by total capacity
+    contribution and snake through the ordering so heavy and light codes
+    alternate across the class list; loads flatten because every bundle
+    receives a near-identical multiset of symbols."""
+    w = (pool.astype(np.float64) / (k - 1)) ** alpha
+    order = np.argsort(w.sum(axis=1), kind="stable")
+    rng = np.random.default_rng(seed)
+    # snake: take alternately from the light and heavy ends
+    lo, hi = 0, len(order) - 1
+    picks = np.empty(n_classes, dtype=np.int64)
+    for i in range(n_classes):
+        if i % 2 == 0:
+            picks[i] = order[lo]; lo += 1
+        else:
+            picks[i] = order[hi]; hi -= 1
+    codes = pool[picks]
+    # shuffle class assignment so class id and code weight are uncorrelated
+    perm = rng.permutation(n_classes)
+    return codes[perm]
+
+
+def build_codebook(n_classes: int, n_bundles: int, k: int, *,
+                   alpha: float = 1.0, eps: float = 1e-6,
+                   pool_size: int = 1 << 18, seed: int = 0,
+                   method: str = "auto") -> np.ndarray:
+    """Construct B in {0..k-1}^(C x n) with unique rows and balanced loads.
+
+    Args:
+      n_classes:  C.
+      n_bundles:  n >= ceil(log_k C); validated here.
+      k:          alphabet size >= 2.
+      alpha:      capacity surrogate exponent (paper uses alpha = 1).
+      eps:        tie-break noise scale of Eq. 2.
+      pool_size:  candidate pool cap when k^n is large.
+      method:     "auto" | "greedy" | "stratified".
+    Returns:
+      (C, n) int32 numpy array of unique codes.
+    """
+    if k < 2:
+        raise ValueError("alphabet size k must be >= 2")
+    need = min_bundles(n_classes, k)
+    if n_bundles < need:
+        raise ValueError(
+            f"n_bundles={n_bundles} infeasible: need >= ceil(log_{k} {n_classes}) = {need}")
+    if k ** n_bundles < n_classes:
+        raise ValueError("code space smaller than number of classes")
+
+    pool = _candidate_pool(k, n_bundles, max(pool_size, 2 * n_classes), seed)
+    if pool.shape[0] < n_classes:
+        raise ValueError("candidate pool smaller than number of classes")
+
+    if method == "auto":
+        # greedy cost ~ C * |Q| * n; cap at ~2^31 fused ops for CPU sanity
+        method = "greedy" if n_classes * pool.shape[0] <= (1 << 26) else "stratified"
+    elif method == "distance" and n_classes * pool.shape[0] > (1 << 26):
+        method = "stratified"
+    if method == "greedy":
+        codes = _greedy_select(pool, n_classes, k, alpha, eps, seed)
+    elif method == "distance":
+        codes = _distance_select(pool, n_classes, k, alpha, eps, seed)
+    elif method == "stratified":
+        codes = _stratified_select(pool, n_classes, k, alpha, seed)
+    else:
+        raise ValueError(f"unknown codebook method: {method}")
+
+    assert codes.shape == (n_classes, n_bundles)
+    return codes.astype(np.int32)
+
+
+def bundle_loads(codebook: np.ndarray | jax.Array, k: int,
+                 alpha: float = 1.0) -> jax.Array:
+    """Per-bundle cumulative load L_j = sum_c U(g(B_cj)) (Eq. 3 objective)."""
+    b = jnp.asarray(codebook)
+    return jnp.sum(capacity(symbol_weight(b, k), alpha), axis=0)
+
+
+def verify_unique(codebook: np.ndarray) -> bool:
+    """Uniqueness check: every class must map to a distinct code."""
+    return len(np.unique(codebook, axis=0)) == codebook.shape[0]

@@ -1,0 +1,120 @@
+"""Bit-flip fault injection (paper Sec. IV-A, Fig. 3-6).
+
+"Random bit flips are injected into the stored model state prior to each test
+evaluation": every *stored* bit of the model flips independently with
+probability p.  For SparseHD the flips land on the non-pruned coordinates;
+for LogHD they land on both the bundles and the stored activation profiles.
+Test inputs are never corrupted.
+
+Two representations are supported:
+  * QTensor (b-bit integer codes): each of the b significant bits of every
+    element flips independently — exact stored-bit semantics.
+  * float32 tensors: flips on the IEEE-754 bit pattern via bitcast.
+
+All randomness is threefry (jax.random), so experiments are reproducible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor
+
+
+def flip_bits_int(q: QTensor, p: float, key: jax.Array) -> QTensor:
+    """Flip each of the b stored bits of every code independently w.p. p.
+
+    Codes are interpreted as b-bit two's-complement words: we XOR a random
+    b-bit mask and re-interpret, exactly as a corrupted memory word would be
+    read back.
+    """
+    b = q.bits
+    u = q.codes.astype(jnp.uint8) & jnp.uint8((1 << b) - 1)
+    flips = jax.random.bernoulli(key, p, q.codes.shape + (b,))
+    weights = (2 ** jnp.arange(b, dtype=jnp.uint8))
+    mask = jnp.sum(flips.astype(jnp.uint8) * weights, axis=-1).astype(jnp.uint8)
+    u = u ^ mask
+    if b == 1:
+        return QTensor(u.astype(jnp.int8), q.scale, 1)
+    # sign-extend b-bit word back to int8
+    sign = jnp.uint8(1 << (b - 1))
+    ext = jnp.where((u & sign) != 0, u | jnp.uint8(0xFF << b & 0xFF), u)
+    return QTensor(ext.astype(jnp.int8), q.scale, b)
+
+
+def flip_bits_f32(w: jax.Array, p: float, key: jax.Array) -> jax.Array:
+    """Flip each of the 32 IEEE-754 bits independently w.p. p."""
+    u = jax.lax.bitcast_convert_type(w.astype(jnp.float32), jnp.uint32)
+    flips = jax.random.bernoulli(key, p, w.shape + (32,))
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    mask = jnp.sum(flips.astype(jnp.uint32) * weights, axis=-1)
+    return jax.lax.bitcast_convert_type(u ^ mask, jnp.float32)
+
+
+def flip_tree(tree, p: float, key: jax.Array, *, skip=()):
+    """Inject flips into every stored leaf of a model pytree.
+
+    QTensor leaves get integer-code flips; float leaves get IEEE flips;
+    integer leaves named in `skip` (e.g. "keep" indices, "codebook") are
+    structural metadata, not stored hypervector memory, and are left intact —
+    matching the paper, which corrupts the hypervector/profile arrays.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QTensor))[0]
+    keys = jax.random.split(key, max(len(leaves_with_paths), 1))
+
+    def name_of(path):
+        last = path[-1]
+        return getattr(last, "key", None)
+
+    out = {}
+    flat, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, QTensor))
+    new_leaves = []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        name = name_of(path)
+        if name in skip:
+            new_leaves.append(leaf)
+        elif isinstance(leaf, QTensor):
+            new_leaves.append(flip_bits_int(leaf, p, keys[i]))
+        elif jnp.issubdtype(leaf.dtype, jnp.floating):
+            new_leaves.append(flip_bits_f32(leaf, p, keys[i]))
+        else:
+            new_leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+# Leaves that are never corrupted: encoder (shared, not part of the model
+# budget), structural indices, and codebooks (hardwired in the ASIC decoder).
+STRUCTURAL_LEAVES = ("keep", "codebook", "proj", "bias", "enc")
+
+
+def corrupt_model(model: dict, p: float, key: jax.Array,
+                  scope: str = "all") -> dict:
+    """Flip bits in the stored parts of a classifier model.
+
+    scope:
+      "all" — every stored leaf: bundles/prototypes AND activation profiles
+              (the paper's stated protocol, Sec. IV-A).
+      "hv"  — bulk hypervector memory only (prototypes / bundles).  Profiles
+              and sigma_inv are C*n + n^2 words — 0.3% of the model — and in
+              a physical deployment live in ECC-protected register/SRAM at
+              negligible cost, exactly like the codebook the ASIC decoder
+              hardwires.  Both scopes treat structural metadata (keep
+              indices, codebook) as protected, for SparseHD and LogHD
+              symmetrically; "hv" isolates the paper's actual robustness
+              mechanism (D-preservation averages flip noise in the
+              similarity sums).
+    """
+    skip = ("keep", "codebook")
+    if scope == "hv":
+        skip = skip + ("profiles", "sigma_inv")
+    elif scope != "all":
+        raise ValueError(f"unknown fault scope: {scope}")
+    enc = model.get("enc")
+    rest = {k: v for k, v in model.items() if k != "enc"}
+    rest = flip_tree(rest, p, key, skip=skip)
+    if enc is not None:
+        rest["enc"] = enc
+    return rest

@@ -1,0 +1,85 @@
+"""Hybrid class- and feature-axis compression (paper Sec. IV-D, Fig. 1c/6).
+
+Start from a trained LogHD model (n bundles, D dims), then apply
+SparseHD-style dimension-wise sparsification to the *bundles* (shared
+keep-mask across bundles).  Activation profiles are re-estimated with the
+sparsified activations so decoding stays calibrated.
+
+Memory:  n * (1-S) * D + C * n   words (+ D mask bits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.loghd import LogHDConfig, fit_loghd
+from repro.core.profiles import decode_profiles, estimate_profiles
+from repro.core.sparsehd import dimension_saliency
+from repro.hdc.encoders import EncoderConfig, encode, encode_batched
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    loghd: LogHDConfig
+    sparsity: float = 0.5
+    saliency: str = "spread"
+
+
+def _l2n(v, axis=-1, eps=1e-12):
+    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
+
+
+def fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
+               y: jax.Array, *, base: Optional[dict] = None,
+               encoded: Optional[jax.Array] = None) -> dict:
+    """Returns {enc, bundles (n, D'), profiles (C, n), keep (D',), codebook}."""
+    if base is None:
+        base = fit_loghd(cfg.loghd, enc_cfg, x, y, encoded=encoded)
+    h = (encode_batched(base["enc"], x, enc_cfg.kind)
+         if encoded is None else encoded)
+
+    d = base["bundles"].shape[1]
+    n_keep = max(1, int(round((1.0 - cfg.sparsity) * d)))
+    sal = dimension_saliency(base["bundles"], cfg.saliency)
+    _, idx = jax.lax.top_k(sal, n_keep)
+    keep = jnp.sort(idx)
+
+    bundles_s = _l2n(base["bundles"][:, keep])
+    h_s = _l2n(h[:, keep])
+    profiles = estimate_profiles(bundles_s, h_s, y, cfg.loghd.n_classes)
+    return {"enc": base["enc"], "bundles": bundles_s, "profiles": profiles,
+            "keep": keep, "codebook": base["codebook"]}
+
+
+def predict_hybrid(model: dict, x: jax.Array, kind: str = "cos",
+                   metric: str = "l2") -> jax.Array:
+    h = encode(model["enc"], x, kind)
+    h_s = _l2n(h[:, model["keep"]])
+    acts = h_s @ _l2n(model["bundles"]).T
+    return decode_profiles(model["profiles"], acts, metric)
+
+
+def predict_hybrid_encoded(model: dict, h: jax.Array,
+                           metric: str = "l2") -> jax.Array:
+    h_s = _l2n(h[:, model["keep"]])
+    acts = h_s @ _l2n(model["bundles"]).T
+    return decode_profiles(model["profiles"], acts, metric)
+
+
+def hybrid_memory_bits(model: dict, bits: int) -> int:
+    n, d_kept = model["bundles"].shape
+    c, _ = model["profiles"].shape
+    d_full = model["enc"]["proj"].shape[1]
+    return n * d_kept * bits + c * n * bits + d_full
+
+
+def sparsity_for_budget(budget_fraction: float, n_classes: int, dim: int,
+                        n_bundles: int) -> float:
+    """S with  n*(1-S)*D + C*n  <=  x * C*D  (same precision both sides)."""
+    keep = (budget_fraction * n_classes * dim - n_classes * n_bundles) / (
+        n_bundles * dim)
+    return float(jnp.clip(1.0 - keep, 0.0, 1.0))

@@ -1,0 +1,139 @@
+"""LogHD classifier (paper Algorithm 1): the primary contribution.
+
+Replaces the C per-class prototypes of conventional HDC with
+n >= ceil(log_k C) bundle hypervectors plus per-class activation profiles:
+
+  memory:  O(C*D)  ->  O(n*D + C*n)  =  O(D log_k C)   for D >> C
+  query:   C dot-products of length D  ->  n dot-products + C distances in R^n
+
+Pipeline (Algorithm 1):
+  (1) class prototypes       H_c  = normalize(sum phi(x))
+  (2) capacity-aware codes   B    = build_codebook(...)         (Eq. 2-3)
+  (3) initial bundling       M_j  = normalize(sum_i g(B_ij) H_i) (Eq. 4)
+  (4) activation profiles    P_c  = E[A(x) | y=c]                (Eq. 5-6)
+  (5) optional refinement    Eq. 9 perceptron updates, T epochs
+      (+ profile re-estimation so decoding stays consistent)
+  (6) inference              argmin_c ||A(x_q) - P_c||^2         (Eq. 7)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codebook as cb
+from repro.core.bundling import build_bundles, refine_bundles
+from repro.core.profiles import activations, decode_profiles, estimate_profiles
+from repro.hdc.conventional import class_prototypes
+from repro.hdc.encoders import EncoderConfig, encode, encode_batched, init_encoder
+
+
+@dataclasses.dataclass(frozen=True)
+class LogHDConfig:
+    n_classes: int
+    k: int = 2                       # alphabet size (paper: k in {2, 3})
+    extra_bundles: int = 0           # eps redundancy in {0, 1, 2} (Sec. III-G)
+    alpha: float = 1.0               # capacity surrogate exponent (paper: 1)
+    refine_epochs: int = 100         # T (paper: 100)
+    lr: float = 3e-4                 # eta (paper: 3e-4)
+    refine_batch: int = 64           # 1 reproduces per-example Alg. 1 exactly
+    metric: str = "l2"               # decode metric (paper default: l2)
+    codebook_method: str = "auto"
+    bipolar_init: bool = False       # initialize bundles at the Eq. 9 fixed
+                                     # point (weights t(s) instead of g(s));
+                                     # beyond-paper, see bundling.build_bundles
+    seed: int = 0
+
+    @property
+    def n_bundles(self) -> int:
+        return cb.min_bundles(self.n_classes, self.k) + self.extra_bundles
+
+
+def memory_bits(n_classes: int, dim: int, n_bundles: int, bits: int,
+                profile_bits: Optional[int] = None) -> int:
+    """LogHD model storage: n bundles of length D plus C profiles of length n.
+
+    Bit flips are injected into both (Sec. IV-A), so both count against the
+    budget."""
+    pb = bits if profile_bits is None else profile_bits
+    return n_bundles * dim * bits + n_classes * n_bundles * pb
+
+
+def conventional_memory_bits(n_classes: int, dim: int, bits: int) -> int:
+    return n_classes * dim * bits
+
+
+def max_bundles_for_budget(budget_fraction: float, n_classes: int, dim: int,
+                           k: int) -> int:
+    """Largest n with  n*D + C*n  <=  x * C * D  (same precision both sides).
+
+    Feasible only if the result >= ceil(log_k C) — the paper's minimum-budget
+    floor ceil(log_k C)/C (Sec. IV-B)."""
+    n = int(budget_fraction * n_classes * dim / (dim + n_classes))
+    return n
+
+
+def fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
+              y: jax.Array, *, prototypes: Optional[jax.Array] = None,
+              enc: Optional[dict] = None,
+              encoded: Optional[jax.Array] = None) -> dict:
+    """Train a LogHD model.  Returns a pytree:
+       {enc, bundles (n,D), profiles (C,n), codebook (C,n) int32,
+        sigma_inv (n,n)}.
+
+    `enc`/`encoded`/`prototypes` let callers share work across methods (the
+    paper trains all methods from the same encoder and prototypes).
+    `sigma_inv` (pooled within-class activation covariance inverse) supports
+    the paper's optional Mahalanobis decode variant (Sec. III-E); the l2
+    default ignores it.
+    """
+    if enc is None or encoded is None:
+        from repro.hdc.encoders import fit_encoder
+        enc, h = fit_encoder(enc_cfg, x)
+    else:
+        h = encoded
+    protos = (class_prototypes(h, y, cfg.n_classes)
+              if prototypes is None else prototypes)
+
+    book = cb.build_codebook(cfg.n_classes, cfg.n_bundles, cfg.k,
+                             alpha=cfg.alpha, seed=cfg.seed,
+                             method=cfg.codebook_method)
+    book_j = jnp.asarray(book)
+    bundles = build_bundles(protos, book_j, cfg.k, bipolar=cfg.bipolar_init)
+    bundles = refine_bundles(bundles, h, y, book_j, cfg.k,
+                             epochs=cfg.refine_epochs, lr=cfg.lr,
+                             batch_size=cfg.refine_batch, seed=cfg.seed)
+    profiles = estimate_profiles(bundles, h, y, cfg.n_classes)
+
+    n = cfg.n_bundles
+    acts = h @ bundles.T
+    resid = acts - profiles[y]
+    sigma = resid.T @ resid / resid.shape[0] + 1e-6 * jnp.eye(n)
+    return {"enc": enc, "bundles": bundles, "profiles": profiles,
+            "codebook": book_j, "sigma_inv": jnp.linalg.inv(sigma)}
+
+
+def predict_loghd(model: dict, x: jax.Array, kind: str = "cos",
+                  metric: str = "l2") -> jax.Array:
+    h = encode(model["enc"], x, kind)
+    acts = activations(model["bundles"], h)
+    return decode_profiles(model["profiles"], acts, metric,
+                           sigma_inv=model.get("sigma_inv"))
+
+
+def predict_loghd_encoded(model: dict, h: jax.Array,
+                          metric: str = "l2") -> jax.Array:
+    acts = activations(model["bundles"], h)
+    return decode_profiles(model["profiles"], acts, metric,
+                           sigma_inv=model.get("sigma_inv"))
+
+
+def loghd_model_bits(model: dict, bits: int) -> int:
+    n, d = model["bundles"].shape
+    c, _ = model["profiles"].shape
+    return memory_bits(c, d, n, bits)

@@ -1,0 +1,78 @@
+"""Activation vectors and per-class expected activation profiles
+(paper Sec. III-D, Eq. 5-6).
+
+A(x)   = (cos(M_1, phi(x)), ..., cos(M_n, phi(x)))  in R^n      (Eq. 5)
+P_y    = E[A(x) | y]  ~  mean over class-y training examples     (Eq. 6)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _l2n(v, axis=-1, eps=1e-12):
+    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
+
+
+def activations(bundles: jax.Array, h: jax.Array) -> jax.Array:
+    """A(x) for a batch: (n, D), (B, D) -> (B, n).
+
+    Inputs are assumed L2-normalized, so cosine similarity is a dot product.
+    """
+    return h @ _l2n(bundles).T
+
+
+def estimate_profiles(bundles: jax.Array, h: jax.Array, y: jax.Array,
+                      n_classes: int) -> jax.Array:
+    """P_c = mean_{x in class c} A(x): -> (C, n).
+
+    Classes absent from the batch get a zero profile (they can never win
+    nearest-profile decoding against observed classes, which is the sane
+    degenerate behaviour).
+    """
+    acts = activations(bundles, h)                        # (B, n)
+    onehot = jax.nn.one_hot(y, n_classes, dtype=acts.dtype)
+    sums = jnp.einsum("bc,bn->cn", onehot, acts)
+    counts = jnp.sum(onehot, axis=0)[:, None]
+    return sums / jnp.maximum(counts, 1.0)
+
+
+def decode_profiles(profiles: jax.Array, acts: jax.Array,
+                    metric: str = "l2", sigma_inv=None) -> jax.Array:
+    """Nearest-profile decode (Eq. 7): (C, n), (B, n) -> (B,) labels.
+
+    metric:
+      "l2"   — argmin_c ||A - P_c||^2 (paper default).  Expanded as
+               ||A||^2 - 2 A.P_c + ||P_c||^2; the ||A||^2 term is constant
+               per row and dropped, leaving one (B,n)x(n,C) matmul + bias —
+               the same streaming form the ASIC decode stage (and our Pallas
+               kernel) uses.
+      "cos"  — argmax_c cos(A, P_c) (paper Sec. III-E alternative).
+      "maha" — argmin_c (A-P_c)' Sigma^-1 (A-P_c) with pooled within-class
+               covariance (paper Sec. III-E: "a Mahalanobis metric can
+               further help").  Whitens the common-mode component of the
+               activation noise.  Same expanded-matmul structure after a
+               change of basis: decode with P~ = P L, A~ = A L for
+               Sigma^-1 = L L'.
+    """
+    if metric == "l2":
+        scores = 2.0 * acts @ profiles.T - jnp.sum(profiles * profiles, axis=-1)
+        return jnp.argmax(scores, axis=-1)
+    if metric == "cos":
+        return jnp.argmax(_l2n(acts) @ _l2n(profiles).T, axis=-1)
+    if metric == "maha":
+        if sigma_inv is None:
+            raise ValueError("maha decode needs sigma_inv")
+        l = jnp.linalg.cholesky(sigma_inv)
+        pw, aw = profiles @ l, acts @ l
+        scores = 2.0 * aw @ pw.T - jnp.sum(pw * pw, axis=-1)
+        return jnp.argmax(scores, axis=-1)
+    raise ValueError(f"unknown decode metric: {metric}")
+
+
+def profile_scores(profiles: jax.Array, acts: jax.Array) -> jax.Array:
+    """Negative squared distances -||A - P_c||^2 as class scores (B, C)."""
+    return (2.0 * acts @ profiles.T
+            - jnp.sum(profiles * profiles, axis=-1)
+            - jnp.sum(acts * acts, axis=-1, keepdims=True))

@@ -1,0 +1,1 @@
+from repro.data.synth import DATASETS, load_dataset, SynthSpec

@@ -1,0 +1,47 @@
+"""Deterministic, step-indexed synthetic LM token pipeline.
+
+Restart-exactness is the point: batch(step) is a pure function of
+(seed, step), so a job that checkpoints at step N and restarts reproduces
+the exact same batch N+1 it would have seen — no data-loader state to
+checkpoint, no skew across elastic reconfigurations (the global batch is
+generated identically regardless of device count, then sharded).
+
+The token stream is a Zipf-ish unigram mixture with Markov bigram structure
+so the LM loss has learnable signal (examples/train_100m.py shows the loss
+dropping well below the unigram entropy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_states: int = 64          # Markov states for bigram structure
+
+    def batch(self, step: int) -> dict:
+        """Returns {"tokens": (B, S) int32, "targets": (B, S) int32}."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s = self.global_batch, self.seq_len
+        # per-(batch, position) Markov state random walk
+        steps = jax.random.randint(k1, (b, s), 0, 3) - 1
+        states = jnp.cumsum(steps, axis=1) % self.n_states
+        # state-dependent token: zipf-ish via squaring a uniform
+        u = jax.random.uniform(k2, (b, s))
+        base = (u * u * (self.vocab // self.n_states)).astype(jnp.int32)
+        tokens = states * (self.vocab // self.n_states) + base
+        tokens = jnp.clip(tokens, 0, self.vocab - 1).astype(jnp.int32)
+        targets = jnp.concatenate(
+            [tokens[:, 1:],
+             jax.random.randint(k3, (b, 1), 0, self.vocab, jnp.int32)], axis=1)
+        return {"tokens": tokens, "targets": targets}

@@ -1,0 +1,91 @@
+"""Conventional HDC classifier: one prototype per class (the paper's baseline).
+
+Training: H_c = sum of phi(x) over class-c examples, then L2-normalize
+(Algorithm 1, step 1).  Inference: argmax_c cosine(phi(x), H_c).
+
+Optionally supports OnlineHD-style iterative refinement of prototypes, which
+the paper uses as the shared "optimization hyperparameters" across methods.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.hdc.encoders import EncoderConfig, encode, init_encoder
+
+
+@dataclasses.dataclass(frozen=True)
+class ConventionalConfig:
+    n_classes: int
+    refine_epochs: int = 0       # OnlineHD-style passes (0 = pure superposition)
+    lr: float = 3e-4
+    batch_size: int = 256
+
+
+def _l2n(v, axis=-1, eps=1e-12):
+    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
+
+
+def class_prototypes(h: jax.Array, y: jax.Array, n_classes: int) -> jax.Array:
+    """Superpose encoded examples per class: (N, D), (N,) -> (C, D) normalized."""
+    onehot = jax.nn.one_hot(y, n_classes, dtype=h.dtype)          # (N, C)
+    protos = jnp.einsum("nc,nd->cd", onehot, h)
+    return _l2n(protos)
+
+
+def _refine_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
+                  lr: float, batch_size: int) -> jax.Array:
+    """One OnlineHD pass: pull the true prototype toward misclassified queries
+    and push the winning wrong prototype away, scaled by the similarity gap."""
+    n = h.shape[0]
+    n_batches = max(n // batch_size, 1)
+    usable = n_batches * batch_size
+    hb = h[:usable].reshape(n_batches, batch_size, -1)
+    yb = y[:usable].reshape(n_batches, batch_size)
+
+    def step(protos, batch):
+        hh, yy = batch
+        sims = hh @ protos.T                                       # (B, C)
+        pred = jnp.argmax(sims, axis=-1)
+        wrong = (pred != yy).astype(hh.dtype)
+        s_true = jnp.take_along_axis(sims, yy[:, None], axis=-1)[:, 0]
+        s_pred = jnp.take_along_axis(sims, pred[:, None], axis=-1)[:, 0]
+        # OnlineHD update weights
+        w_pull = wrong * (1.0 - s_true)
+        w_push = wrong * (1.0 - s_pred)
+        onehot_y = jax.nn.one_hot(yy, protos.shape[0], dtype=hh.dtype)
+        onehot_p = jax.nn.one_hot(pred, protos.shape[0], dtype=hh.dtype)
+        delta = jnp.einsum("b,bc,bd->cd", lr * w_pull, onehot_y, hh)
+        delta -= jnp.einsum("b,bc,bd->cd", lr * w_push, onehot_p, hh)
+        return _l2n(protos + delta), None
+
+    protos, _ = jax.lax.scan(step, protos, (hb, yb))
+    return protos
+
+
+def fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
+                     x: jax.Array, y: jax.Array, *, enc=None,
+                     encoded=None) -> dict:
+    """Train the baseline model.  Returns {enc, protos} pytree."""
+    if enc is None or encoded is None:
+        from repro.hdc.encoders import fit_encoder
+        enc, h = fit_encoder(enc_cfg, x)
+    else:
+        h = encoded
+    protos = class_prototypes(h, y, cfg.n_classes)
+    for _ in range(cfg.refine_epochs):
+        protos = _refine_epoch(protos, h, y, cfg.lr, cfg.batch_size)
+    return {"enc": enc, "protos": protos}
+
+
+def predict_conventional(model: dict, x: jax.Array, kind: str = "cos") -> jax.Array:
+    h = encode(model["enc"], x, kind)
+    protos = _l2n(model["protos"])
+    return jnp.argmax(h @ protos.T, axis=-1)
+
+
+def predict_from_encoded(protos: jax.Array, h: jax.Array) -> jax.Array:
+    return jnp.argmax(h @ _l2n(protos).T, axis=-1)

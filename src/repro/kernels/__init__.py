@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the LogHD hot spots the paper's ASIC accelerates.
+
+  bundle_sim     — query x bundle cosine similarities: the n similarity lanes
+                   of the ASIC datapath as a D-tiled MXU matmul.
+  profile_decode — activation -> per-class scores -||A - P||^2: the ASIC
+                   decode stage as an expanded (B,n)x(n,C) matmul + bias.
+  hdc_encode     — random-projection encoder (projection + nonlinearity),
+                   the encode stage.
+  loghd_head     — the LogHD LM head: bundle_sim + profile_decode chained
+                   at vocabulary scale (C = vocab).
+
+Each kernel directory holds:
+  <name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (padding, dtype plumbing, interpret mode)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.bundle_sim.ops import bundle_similarity
+from repro.kernels.bundle_sim.ref import bundle_similarity_ref

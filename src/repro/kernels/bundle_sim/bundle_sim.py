@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: batched query x bundle cosine similarity.
+
+Computes A[b, j] = <h_b / ||h_b||, M_j> for queries h (B, D) and
+pre-normalized bundles M (n, D).  This is the ASIC's n-lane similarity stage
+(paper Fig. 2b/c) mapped onto the MXU:
+
+  * grid = (B tiles, D tiles); D is the reduction axis and iterates
+    innermost, so each (bm, n) output block stays resident in a VMEM f32
+    accumulator across the whole D loop,
+  * the query-norm reduction ||h_b||^2 is fused into the same D loop (second
+    scratch column), so h is read from HBM exactly once,
+  * n is tiny (<= 32 in the paper's regimes) and padded to the 128 lane
+    width by the wrapper; bundles are padded likewise.
+
+VMEM footprint per step: bm*bd (h block) + n*bd (M block) + bm*(n+1) f32
+scratch.  Defaults bm=256, bd=512: 256*512*4 + 128*512*4 + small ~= 0.8 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(h_ref, m_ref, out_ref, acc_ref, nrm_ref, *, n_d: int):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        nrm_ref[...] = jnp.zeros_like(nrm_ref)
+
+    h = h_ref[...].astype(jnp.float32)                     # (bm, bd)
+    m = m_ref[...].astype(jnp.float32)                     # (n, bd)
+    acc_ref[...] += jax.lax.dot_general(
+        h, m, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (bm, n)
+    nrm_ref[...] += jnp.sum(h * h, axis=-1, keepdims=True)  # (bm, 1)
+
+    @pl.when(d == n_d - 1)
+    def _finish():
+        inv = jax.lax.rsqrt(nrm_ref[...] + 1e-12)          # (bm, 1)
+        out_ref[...] = (acc_ref[...] * inv).astype(out_ref.dtype)
+
+
+def bundle_sim_pallas(h: jax.Array, m: jax.Array, *, block_b: int = 256,
+                      block_d: int = 512, interpret: bool = True) -> jax.Array:
+    """h: (B, D) queries (unnormalized), m: (n, D) normalized bundles.
+    Returns (B, n) cosine similarities in f32.  B, D, n must already be
+    padded to tile multiples (ops.py handles that)."""
+    b, d = h.shape
+    n, d2 = m.shape
+    assert d == d2, (h.shape, m.shape)
+    n_b, n_d = b // block_b, d // block_d
+    assert b % block_b == 0 and d % block_d == 0, (h.shape, block_b, block_d)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_d=n_d),
+        grid=(n_b, n_d),
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((n, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, n), jnp.float32),
+            pltpu.VMEM((block_b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, m)

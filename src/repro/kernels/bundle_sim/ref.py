@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the bundle_sim kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bundle_similarity_ref(h: jax.Array, m: jax.Array) -> jax.Array:
+    """A[b, j] = <h_b/||h_b||, M_j>; h (B, D), m (n, D) -> (B, n) f32."""
+    h = h.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    hn = h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-12)
+    return hn @ m.T

@@ -1,0 +1,2 @@
+from repro.kernels.hdc_encode.ops import hdc_encode
+from repro.kernels.hdc_encode.ref import hdc_encode_ref

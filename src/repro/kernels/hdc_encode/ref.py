@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the hdc_encode kernel (matches hdc.encoders.encode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hdc_encode_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+                   center: jax.Array, kind: str = "cos") -> jax.Array:
+    """Normalized phi(x): l2n(l2n(nonlin(xW)) - center'), matching
+    repro.hdc.encoders.encode semantics where `center` is defined on the
+    normalized scale.  Here, to keep the kernel a single HBM pass, the
+    center subtraction happens pre-normalization; the oracle matches the
+    kernel contract: out = nonlin(xW) - center (un-normalized)."""
+    z = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if kind == "cos":
+        h = jnp.cos(z + bias) * jnp.sin(z)
+    elif kind == "rp":
+        h = z
+    elif kind == "rp_sign":
+        h = jnp.sign(z)
+    else:
+        raise ValueError(kind)
+    return h - center

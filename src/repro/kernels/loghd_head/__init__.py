@@ -1,0 +1,2 @@
+from repro.kernels.loghd_head.ops import loghd_head_logits
+from repro.kernels.loghd_head.ref import loghd_head_logits_ref

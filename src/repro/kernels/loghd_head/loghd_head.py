@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused LogHD LM head (class-axis compressed vocab head).
+
+Produces logits[b, v] = -||h_b M^T - P_v||^2 for hidden states h (B, D),
+bundles M (n, D) and vocab profiles P (V, n) — the paper's bundle-similarity
++ profile-decode pipeline at vocabulary scale, fused into ONE kernel so the
+(B, n) activation intermediate never leaves VMEM:
+
+  * grid = (B tiles, V tiles, D tiles), D innermost.  On the FIRST V tile
+    (j == 0) the D loop accumulates A = h M^T into VMEM f32 scratch; Pallas
+    scratch persists across grid steps within one pallas_call, so every
+    later V tile (j > 0) reuses the resident A — the D loop for them is a
+    no-op (their h/M blocks have j-independent index maps, so the pipeline
+    does not even re-fetch them).  This is recompute-free fusion: A is
+    computed exactly once per B tile.
+  * on the last D step of every V tile, the decode
+    2 A P^T - ||P||^2 - ||A||^2 streams one (bv, n) profile tile against
+    the resident A block straight out of scratch.
+
+Compared to chaining the bundle_sim and profile_decode kernels, fusion here
+saves one HBM round-trip of A (small) and one kernel launch; the dominant
+traffic — the (B, V) logits write and the (V, n) profile read — is identical,
+which the roofline analysis in EXPERIMENTS.md quantifies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(h_ref, m_ref, p_ref, out_ref, a_ref, *, n_d: int):
+    j = pl.program_id(1)   # V tile
+    d = pl.program_id(2)   # D tile
+
+    # Phase 1: accumulate A = h M^T in VMEM scratch, only on the first V tile
+    @pl.when(j == 0)
+    def _accumulate():
+        @pl.when(d == 0)
+        def _init():
+            a_ref[...] = jnp.zeros_like(a_ref)
+
+        h = h_ref[...].astype(jnp.float32)                 # (bm, bd)
+        m = m_ref[...].astype(jnp.float32)                 # (n, bd)
+        a_ref[...] += jax.lax.dot_general(
+            h, m, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bm, n)
+
+    # Phase 2: on the last D step, decode this V tile against the resident A
+    @pl.when(d == n_d - 1)
+    def _decode():
+        a = a_ref[...]                                     # (bm, n)
+        p = p_ref[...].astype(jnp.float32)                 # (bv, n)
+        dots = jax.lax.dot_general(
+            a, p, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bm, bv)
+        p_sq = jnp.sum(p * p, axis=-1)[None, :]
+        a_sq = jnp.sum(a * a, axis=-1)[:, None]
+        out_ref[...] = (2.0 * dots - p_sq - a_sq).astype(out_ref.dtype)
+
+
+def loghd_head_pallas(h: jax.Array, m: jax.Array, p: jax.Array, *,
+                      block_b: int = 256, block_v: int = 1024,
+                      block_d: int = 512,
+                      interpret: bool = True) -> jax.Array:
+    """h: (B, D), m: (n, D), p: (V, n) -> (B, V) f32 logits.
+    Pre-padded shapes required (ops.py pads)."""
+    b, d = h.shape
+    n, d2 = m.shape
+    v, n2 = p.shape
+    assert d == d2 and n == n2
+    n_d = d // block_d
+    assert b % block_b == 0 and v % block_v == 0 and d % block_d == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_d=n_d),
+        grid=(b // block_b, v // block_v, n_d),
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, k)),
+            pl.BlockSpec((n, block_d), lambda i, j, k: (0, k)),
+            pl.BlockSpec((block_v, n), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_v), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, n), jnp.float32)],
+        interpret=interpret,
+    )(h, m, p)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the loghd_head kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def loghd_head_logits_ref(h: jax.Array, m: jax.Array, p: jax.Array) -> jax.Array:
+    """logits[b, v] = -||h_b M^T - P_v||^2; h (B,D), m (n,D), p (V,n)."""
+    a = h.astype(jnp.float32) @ m.astype(jnp.float32).T        # (B, n)
+    pf = p.astype(jnp.float32)
+    return (2.0 * a @ pf.T
+            - jnp.sum(pf * pf, axis=-1)[None, :]
+            - jnp.sum(a * a, axis=-1)[:, None])

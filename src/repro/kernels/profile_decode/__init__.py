@@ -1,0 +1,2 @@
+from repro.kernels.profile_decode.ops import profile_decode_scores
+from repro.kernels.profile_decode.ref import profile_decode_scores_ref

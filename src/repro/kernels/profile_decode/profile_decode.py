@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: nearest-profile decode scores.
+
+Computes scores[b, c] = -||A_b - P_c||^2 expanded as
+    2 <A_b, P_c> - ||P_c||^2 - ||A_b||^2
+which keeps the argmax semantics of Eq. 7 while turning the decode into one
+(bm, n) x (n, bc) MXU matmul plus rank-1 biases — the streaming form of the
+ASIC's decode stage (paper Fig. 2c).
+
+  * grid = (B tiles, C tiles); n (the activation width) is small and kept
+    whole inside each block — no reduction loop is needed,
+  * ||P_c||^2 and ||A_b||^2 are computed in-block (cheap: O(bc*n), O(bm*n)),
+    so profiles are read from HBM exactly once per B tile,
+  * used both at classifier scale (C <= a few hundred) and at LM-head scale
+    (C = vocab, e.g. 151936) where the C grid axis does the heavy tiling.
+
+VMEM per step (bm=256, bc=512, n=128 padded): 256*128*4 + 512*128*4 +
+256*512*4 ~= 0.9 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, p_ref, out_ref):
+    a = a_ref[...].astype(jnp.float32)                     # (bm, n)
+    p = p_ref[...].astype(jnp.float32)                     # (bc, n)
+    dots = jax.lax.dot_general(
+        a, p, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (bm, bc)
+    p_sq = jnp.sum(p * p, axis=-1)[None, :]                # (1, bc)
+    a_sq = jnp.sum(a * a, axis=-1)[:, None]                # (bm, 1)
+    out_ref[...] = (2.0 * dots - p_sq - a_sq).astype(out_ref.dtype)
+
+
+def profile_decode_pallas(acts: jax.Array, profiles: jax.Array, *,
+                          block_b: int = 256, block_c: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """acts: (B, n), profiles: (C, n); returns (B, C) f32 scores.
+    Shapes must be pre-padded to tile multiples (ops.py handles that)."""
+    b, n = acts.shape
+    c, n2 = profiles.shape
+    assert n == n2
+    assert b % block_b == 0 and c % block_c == 0
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // block_b, c // block_c),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(acts, profiles)

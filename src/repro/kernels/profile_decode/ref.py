@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the profile_decode kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def profile_decode_scores_ref(acts: jax.Array, profiles: jax.Array) -> jax.Array:
+    """scores[b, c] = -||A_b - P_c||^2 : (B, n), (C, n) -> (B, C) f32."""
+    a = acts.astype(jnp.float32)
+    p = profiles.astype(jnp.float32)
+    return -jnp.sum((a[:, None, :] - p[None, :, :]) ** 2, axis=-1)

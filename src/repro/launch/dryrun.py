@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective statistics.
+
+This is how the distribution config is proven coherent without hardware:
+`jit(step).lower(**ShapeDtypeStructs).compile()` runs the full XLA SPMD
+partitioner for 256/512 devices; sharding mismatches, compile-time OOMs and
+unsupported collectives all surface here as hard failures.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh single          # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun                    # the full matrix
+
+Outputs one JSON per cell under --out with:
+  memory_analysis (per-device bytes), global HLO FLOPs/bytes (lowered),
+  per-device collective-operand bytes by op kind (parsed from the
+  post-SPMD compiled module), wall compile time.
+"""
+
+import argparse
+import collections
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8,
+                "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shape(text: str) -> int:
+    """Sum byte sizes of all tensor shapes in an HLO result-type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective-operand bytes by op kind, from the post-SPMD
+    module (shapes in the text are per-device shard shapes)."""
+    out = collections.Counter()
+    counts = collections.Counter()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = ([^=]*?)(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "start" in line.split("=")[1][:60] and kind not in line:
+            continue
+        # result type precedes the op name
+        result_type = m.group(1)
+        out[kind] += _bytes_of_shape(result_type)
+        counts[kind] += 1
+    return {"bytes": dict(out), "counts": dict(counts),
+            "total_bytes": int(sum(out.values()))}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str | None):
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import cell_specs
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.run_long_context:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "full-attention arch: long_500k requires "
+                          "sub-quadratic attention (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+    t0 = time.time()
+    step_fn, in_specs, out_shardings, donate = cell_specs(cfg, shape, mesh)
+    jit_kwargs = {}
+    if out_shardings is not None:
+        jit_kwargs["out_shardings"] = out_shardings
+    if donate:
+        jit_kwargs["donate_argnums"] = donate
+    with mesh:
+        lowered = jax.jit(step_fn, **jit_kwargs).lower(*in_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+    mem["per_device_total_bytes"] = (
+        mem["argument_size_in_bytes"] + mem["output_size_in_bytes"]
+        + mem["temp_size_in_bytes"] - mem["alias_size_in_bytes"])
+
+    lca = lowered.cost_analysis() or {}
+    global_cost = {"flops": float(lca.get("flops", -1)),
+                   "bytes_accessed": float(lca.get("bytes accessed", -1))}
+    cca = compiled.cost_analysis() or {}
+    device_cost = {"flops": float(cca.get("flops", -1)),
+                   "bytes_accessed": float(cca.get("bytes accessed", -1))}
+
+    coll = collective_bytes(compiled.as_text())
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": mem,
+        "global_cost": global_cost,
+        "device_cost": device_cost,
+        "collectives": coll,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES
+    from repro.configs.base import SHAPES
+
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch} x {shape} x {mesh_kind}"
+                fn = os.path.join(args.out,
+                                  f"{arch}__{shape}__{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    print(f"[skip] {tag} (exists)", flush=True)
+                    continue
+                try:
+                    r = run_cell(arch, shape, mesh_kind, args.out)
+                    if r["status"] == "skipped":
+                        print(f"[skip] {tag}: {r['reason']}", flush=True)
+                        with open(fn, "w") as f:
+                            json.dump(r, f, indent=1)
+                        continue
+                    gb = r["memory"]["per_device_total_bytes"] / 2**30
+                    print(f"[ ok ] {tag}: {gb:.2f} GiB/dev, "
+                          f"{r['global_cost']['flops']:.3e} FLOPs, "
+                          f"coll {r['collectives']['total_bytes']/2**20:.1f} "
+                          f"MiB/dev, compile {r['compile_s']}s", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax init,
+and tests/benches must keep seeing the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices=None):
+    """Smallest honest mesh for local runs: (data=N, model=1)."""
+    devices = devices if devices is not None else jax.devices()
+    return jax.make_mesh((len(devices), 1), ("data", "model"),
+                         devices=devices)

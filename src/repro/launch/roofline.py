@@ -1,0 +1,183 @@
+"""Roofline analysis from the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, derives the three roofline terms on TPU v5e
+(197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  T_compute    = FLOPs            / (chips * 197e12)
+  T_memory     = HLO bytes        / (chips * 819e9)
+  T_collective = collective bytes / (chips * 50e9)
+
+FLOPs source: XLA's HLO cost analysis counts while-loop (scan) bodies ONCE,
+so for scanned-layer models it undercounts by ~n_layers; we therefore use an
+ANALYTIC per-arch FLOP model (validated against an unrolled 1-layer HLO) as
+the authoritative compute term and report the HLO figure alongside.
+
+Memory-term source: compiled per-device cost_analysis "bytes accessed",
+scaled by layer-undercount correction; plus a parameter-traffic lower bound
+(every step must stream all resident weights+opt state once).
+
+Collective term: per-device operand bytes of all all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops in the post-SPMD module
+(dryrun.collective_bytes), directly per the spec formula.  Scan bodies are
+also counted once here — we apply the same trip-count correction.
+
+MODEL_FLOPS = 6 N D_tokens (train) / 2 N_active D_tokens (inference) gives
+the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Forward-pass FLOPs (matmul-dominated terms), per the usual
+    2*params-per-token + attention accounting; train = 3x forward."""
+    s, b = shape.seq_len, shape.global_batch
+    tokens = b * (1 if shape.kind == "decode" else s)
+    n_active = cfg.active_param_count()
+    # non-embedding active params do 2 FLOPs/param/token; embedding is a
+    # gather (no matmul flops); dense head does 2*D*V per token
+    n_embed = cfg.vocab * cfg.d_model
+    matmul = 2.0 * (n_active - n_embed) * tokens
+
+    # attention score/context FLOPs
+    attn = 0.0
+    ctx = s  # kv length
+    for blk_list, reps in ((cfg.prefix_pattern,
+                            cfg.n_prefix // max(len(cfg.prefix_pattern), 1)),
+                           (cfg.pattern, cfg.n_periods)):
+        for blk in blk_list:
+            if blk.mixer in ("attn", "mla"):
+                q_hd = (cfg.mla_nope_dim + cfg.mla_rope_dim
+                        if blk.mixer == "mla" else cfg.head_dim)
+                v_hd = cfg.mla_v_dim if blk.mixer == "mla" else cfg.head_dim
+                if shape.kind == "decode":
+                    per_tok = 2.0 * cfg.n_heads * (q_hd + v_hd) * ctx
+                    attn += reps * per_tok * tokens
+                else:
+                    # causal: S*S/2 pairs
+                    attn += reps * 2.0 * cfg.n_heads * (q_hd + v_hd) \
+                        * b * s * s / 2
+            elif blk.mixer == "attn_local":
+                w = cfg.local_window
+                eff = w if shape.kind == "decode" else min(2 * w, s)
+                per_tok = 2.0 * cfg.n_heads * 2 * cfg.head_dim * eff
+                attn += reps * per_tok * tokens * (0.5 if shape.kind != "decode" and s <= w else 1.0)
+            elif blk.mixer == "mamba":
+                di, ds = 2 * cfg.d_model, 16
+                attn += reps * tokens * (2.0 * di * ds * 4)   # scan updates
+            elif blk.mixer in ("mlstm",):
+                di = 2 * cfg.d_model
+                hd = di // cfg.n_kv_heads
+                eff = 128 if shape.kind != "decode" else 1    # chunk size
+                attn += reps * tokens * 2.0 * di * (hd + eff)
+            elif blk.mixer == "slstm":
+                attn += reps * tokens * 8.0 * cfg.d_model * cfg.d_model
+    fwd = matmul + attn
+    total = 3.0 * fwd if shape.kind == "train" else fwd
+    model_flops_basis = (6.0 if shape.kind == "train" else 2.0) \
+        * (cfg.active_param_count() - n_embed) * tokens
+    return {"fwd": fwd, "total": total, "model_flops": model_flops_basis,
+            "tokens": tokens}
+
+
+def _layer_correction(cfg: ModelConfig) -> float:
+    """HLO cost analysis counts each scan body once; multiply per-body cost
+    by the trip count to approximate the full program."""
+    return float(max(cfg.n_periods, 1))
+
+
+def roofline_cell(record: dict) -> dict:
+    cfg = get_config(record["arch"])
+    shape = SHAPES[record["shape"]]
+    chips = record["n_devices"]
+    an = analytic_flops(cfg, shape)
+
+    t_compute = an["total"] / (chips * PEAK_FLOPS)
+
+    # memory: per-device bytes accessed; correct scan undercount, and floor
+    # at one full stream of resident state (params [+ opt] + caches)
+    dev_bytes = record["device_cost"]["bytes_accessed"]
+    corr = _layer_correction(cfg)
+    mem_bytes = dev_bytes * corr
+    state_floor = record["memory"]["argument_size_in_bytes"]
+    mem_bytes = max(mem_bytes, state_floor)
+    t_memory = mem_bytes / HBM_BW
+
+    coll_bytes = record["collectives"]["total_bytes"] * corr
+    t_collective = coll_bytes / LINK_BW
+    # ring-model estimate: each op moves ~(n-1)/n of its bytes per device,
+    # spread over the 4 ICI links of a v5e; all-reduce costs 2x (RS+AG).
+    per_kind = record["collectives"]["bytes"]
+    ring = 0.0
+    for kind, b in per_kind.items():
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        ring += factor * b * corr * (15.0 / 16.0)
+    t_collective_ring = ring / (4 * LINK_BW)
+
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)), key=lambda kv: kv[1])
+    hlo_flops_corr = record["global_cost"]["flops"] * corr
+    useful = an["model_flops"] / max(an["total"], 1.0)
+    frac = t_compute / max(t_compute, t_memory, t_collective)
+    return {
+        **{k: record[k] for k in ("arch", "shape", "mesh", "n_devices")},
+        "T_compute_s": t_compute,
+        "T_memory_s": t_memory,
+        "T_collective_s": t_collective,
+        "T_collective_ring_s": t_collective_ring,
+        "dominant": dominant[0],
+        "roofline_fraction": frac,
+        "analytic_flops": an["total"],
+        "hlo_flops_scan_corrected": hlo_flops_corr,
+        "model_flops": an["model_flops"],
+        "useful_compute_ratio": useful,
+        "mem_gib_per_dev": record["memory"]["per_device_total_bytes"] / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(args.dryrun_dir, "*.json"))):
+        rec = json.load(open(fn))
+        if rec.get("status") != "ok":
+            continue
+        rows.append(roofline_cell(rec))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    hdr = (f"{'arch':<22}{'shape':<13}{'mesh':<7}{'Tcomp':>9}{'Tmem':>9}"
+           f"{'Tcoll':>9}{'Tc-ring':>9} {'dom':<11}{'frac':>6}"
+           f"{'useful':>8}{'GiB/dev':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:<22}{r['shape']:<13}{r['mesh']:<7}"
+              f"{r['T_compute_s']:>9.2e}{r['T_memory_s']:>9.2e}"
+              f"{r['T_collective_s']:>9.2e}{r['T_collective_ring_s']:>9.2e}"
+              f" {r['dominant']:<11}"
+              f"{r['roofline_fraction']:>6.2f}{r['useful_compute_ratio']:>8.2f}"
+              f"{r['mem_gib_per_dev']:>9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""input_specs + step builders for the multi-pod dry-run.
+
+For every (arch, shape) cell this module produces:
+  * a step function to lower (train_step / prefill_step / decode_step),
+  * ShapeDtypeStruct stand-ins for every input, with NamedShardings —
+    weak-type-correct, shardable, and allocation-free,
+so dryrun.py can `jit(step).lower(*specs).compile()` on the production
+meshes without touching real memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import (decode_step, forward, init_decode_state,
+                                init_params, loss_fn)
+from repro.models.sharding import batch_spec, tree_shardings, tree_specs
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+def _struct(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def _maybe(mesh: Mesh, axis: str, dim: int):
+    """Shard `dim` on `axis` only if divisible (else replicate)."""
+    return axis if dim % mesh.shape[axis] == 0 and dim >= mesh.shape[axis] \
+        else None
+
+
+def _dp_for_batch(mesh: Mesh, batch: int):
+    """Largest prefix of the dp axes that divides `batch`."""
+    axes = []
+    prod = 1
+    for a in _dp_axes(mesh):
+        if batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+# -------------------------------------------------------------- train cell --
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """int8 moments for the 671B config (required to fit 16 GB v5e);
+    f32 elsewhere."""
+    big = cfg.param_count() > 100e9
+    return AdamWConfig(moment_dtype="int8" if big else "float32")
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch, step):
+        if cfg.frontend is None:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, cfg, batch["tokens"], batch["targets"], mesh)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, cfg, None, batch["targets"], mesh,
+                embeddings=batch["embeddings"])
+        lr = cosine_schedule(step, peak_lr=3e-4, warmup_steps=100,
+                             total_steps=10_000)
+        opt_state, params = adamw_update(opt_state, params, grads, opt_cfg,
+                                         lr=lr)
+        return params, opt_state, loss
+    return train_step
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    opt_cfg = opt_config_for(cfg)
+    params_s = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_s = jax.eval_shape(lambda: adamw_init(params_s, opt_cfg))
+    p_shard = tree_shardings(params_s, mesh)
+    # optimizer state shardings mirror the params'; int8 codes/scales and the
+    # step counter get matching / replicated layouts via the rules fallback
+    o_shard = _opt_shardings(opt_s, params_s, p_shard, mesh)
+
+    dp = _dp_for_batch(mesh, shape.global_batch)
+    tok = NamedSharding(mesh, P(dp, None))
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                       jnp.int32, sharding=tok),
+        "targets": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                        jnp.int32, sharding=tok),
+    }
+    if cfg.frontend is not None:
+        emb = NamedSharding(mesh, P(dp, None, None))
+        batch["embeddings"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.d_model),
+            jnp.dtype(cfg.dtype), sharding=emb)
+        del batch["tokens"]
+    step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    step_fn = make_train_step(cfg, mesh, opt_cfg)
+    in_specs = (_struct(params_s, p_shard), _struct(opt_s, o_shard), batch,
+                step_struct)
+    out_shardings = (p_shard, o_shard, None)
+    return step_fn, in_specs, out_shardings, (0, 1)
+
+
+def _opt_shardings(opt_s, params_s, p_shard, mesh):
+    """Moment trees follow the param shardings exactly.  int8-codec leaves:
+    `codes` has the param's shape -> same sharding; `scale` has the last
+    axis reduced by the block factor -> same spec with the last axis
+    replicated (it rarely divides)."""
+    rep = NamedSharding(mesh, P())
+
+    def match(pshard_leaf, moment_leaf):
+        if isinstance(moment_leaf, dict):  # int8 codec {codes, scale}
+            spec = pshard_leaf.spec
+            scale_spec = P(*(tuple(spec)[:-1] + (None,))) if len(spec) \
+                else P()
+            return {"codes": pshard_leaf,
+                    "scale": NamedSharding(mesh, scale_spec)}
+        return pshard_leaf
+
+    def moments(tree):
+        return jax.tree.map(
+            match, p_shard, tree,
+            is_leaf=lambda x: isinstance(x, dict) and "codes" in x)
+
+    return {"step": rep, "mu": moments(opt_s["mu"]),
+            "nu": moments(opt_s["nu"])}
+
+
+# ------------------------------------------------------------ prefill cell --
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    def prefill_step(params, batch):
+        if cfg.frontend is None:
+            logits, _ = forward(params, cfg, batch["tokens"], mesh)
+        else:
+            logits, _ = forward(params, cfg, None, mesh,
+                                embeddings=batch["embeddings"])
+        return logits[:, -1:]
+    return prefill_step
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    params_s = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = tree_shardings(params_s, mesh)
+    dp = _dp_for_batch(mesh, shape.global_batch)
+    tok = NamedSharding(mesh, P(dp, None))
+    batch = {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32, sharding=tok)}
+    if cfg.frontend is not None:
+        emb = NamedSharding(mesh, P(dp, None, None))
+        batch = {"embeddings": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.d_model),
+            jnp.dtype(cfg.dtype), sharding=emb)}
+    return make_prefill_step(cfg, mesh), (_struct(params_s, p_shard), batch), \
+        None, ()
+
+
+# ------------------------------------------------------------- decode cell --
+
+def _decode_state_shardings(cfg: ModelConfig, state_s, mesh: Mesh,
+                            batch: int, long_ctx: bool):
+    """Cache/state sharding policy:
+       decode_32k : batch on dp axes, heads/d_inner on model.
+       long_500k  : batch=1 -> attn caches sharded along SEQUENCE on "data",
+                    state feature axes on "model" (divisibility-guarded)."""
+    dp = _dp_for_batch(mesh, batch)
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        ndim = len(leaf.shape)
+        # leaves are stacked (L, B, ...) by init_decode_state
+        if "k" in names or "v" in names:           # (L, B, S, KV, hd)
+            if long_ctx:
+                return P(None, None, _maybe(mesh, "data", leaf.shape[2]),
+                         _maybe(mesh, "model", leaf.shape[3]), None)
+            # prefer sharding kv-heads on "model"; fall back to the seq axis
+            # when the head count doesn't divide (GQA kv=8 on a 16-way axis
+            # would otherwise replicate a 40+ GiB cache per device)
+            kv_ax = _maybe(mesh, "model", leaf.shape[3])
+            seq_ax = None if kv_ax else _maybe(mesh, "model", leaf.shape[2])
+            return P(None, dp, seq_ax, kv_ax, None)
+        if "c_kv" in names or "k_rope" in names:    # (L, B, S, r)
+            if long_ctx:
+                return P(None, None, _maybe(mesh, "data", leaf.shape[2]), None)
+            return P(None, dp, _maybe(mesh, "model", leaf.shape[2]), None)
+        if "conv" in names:                         # (L, B, dc-1, di)
+            return P(None, dp if not long_ctx else None, None,
+                     _maybe(mesh, "model", leaf.shape[3]))
+        if "ssm" in names:                          # (L, B, di, ds)
+            return P(None, dp if not long_ctx else None,
+                     _maybe(mesh, "model", leaf.shape[2]), None)
+        if "c" in names and ndim == 5:              # mlstm C (L,B,H,hd,hd)
+            return P(None, dp if not long_ctx else None, None,
+                     _maybe(mesh, "model", leaf.shape[3]), None)
+        if ndim >= 2:
+            bdim = dp if (not long_ctx and leaf.shape[1] % 16 == 0) else None
+            return P(*((None, bdim) + (None,) * (ndim - 2)))
+        return P(*((None,) * ndim))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, state_s)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh):
+    def step(params, state, tokens, pos):
+        return decode_step(params, cfg, state, tokens, pos, mesh)
+    return step
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    params_s = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = tree_shardings(params_s, mesh)
+    long_ctx = shape.seq_len > 100_000
+    state_s = jax.eval_shape(
+        lambda: init_decode_state(cfg, batch=shape.global_batch,
+                                  max_len=shape.seq_len))
+    s_shard = _decode_state_shardings(cfg, state_s, mesh, shape.global_batch,
+                                      long_ctx)
+    dp = _dp_for_batch(mesh, shape.global_batch)
+    tok = NamedSharding(mesh, P(dp, None))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                  sharding=tok)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return make_decode_step(cfg, mesh), \
+        (_struct(params_s, p_shard), _struct(state_s, s_shard), tokens, pos), \
+        None, (1,)
+
+
+def cell_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """Dispatch: returns (step_fn, in_specs, out_shardings, donate)."""
+    if shape.kind == "train":
+        return train_specs(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape, mesh)
+    return decode_specs(cfg, shape, mesh)

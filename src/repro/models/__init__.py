@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures as one composable decoder stack.
+
+Every architecture is expressed as a `ModelConfig` (configs/) naming a
+periodic block pattern over five mixer kinds (attn / attn_local / mla /
+mamba / mlstm / slstm) and three FFN kinds (dense / moe / none), a head
+(dense / loghd), and frontend stubs for the VLM/audio archs.
+"""
+
+from repro.models.model import (Model, init_params, param_specs, forward,
+                                loss_fn, init_decode_state, decode_step,
+                                prefill)

@@ -1,0 +1,83 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embedding tables."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def init_rms(dim: int) -> jax.Array:
+    # stored as (scale - 1) so zeros-init means identity (gemma convention)
+    return jnp.zeros((dim,), jnp.float32)
+
+
+# ---------------------------------------------------------------- rotary ---
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+               ) -> jax.Array:
+    """x: (..., S, H, hd), positions: (..., S) int -> same shape."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ dense ---
+
+def gated_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU: silu(x Wg) * (x Wi) @ Wo.  Weights bf16, accums f32 by XLA."""
+    g = jax.nn.silu(x @ params["wg"])
+    h = g * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "wi": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "wg": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+# -------------------------------------------------------------- embedding ---
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02
+                      ).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def dense_head_logits(params: dict, x: jax.Array) -> jax.Array:
+    """x: (..., D) -> (..., V) in f32."""
+    return (x @ params["w"]).astype(jnp.float32)
+
+
+def init_dense_head(key, d_model: int, vocab: int, dtype) -> dict:
+    return {"w": (jax.random.normal(key, (d_model, vocab))
+                  / np.sqrt(d_model)).astype(dtype)}

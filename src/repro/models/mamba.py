@@ -1,0 +1,165 @@
+"""Mamba-1 (S6 selective state space) block, for Jamba's 7-of-8 layers.
+
+Structure per block:
+  in_proj (D -> 2*d_inner: x, z) -> causal depthwise conv1d + silu ->
+  selective scan over h_t = exp(dt A) h_{t-1} + dt B_t x_t, y = C_t h_t +
+  D_skip x -> silu(z) gate -> out_proj.
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel has no
+sensible port; instead we run a CHUNKED scan — lax.scan over time chunks of
+`chunk` steps, with an associative scan *inside* each chunk.  The transient
+(B, chunk, d_inner, d_state) tensor is what bounds memory; chunk=64 keeps it
+~100 MB at Jamba scale.  Decode carries (conv_state, ssm_state) — O(1) per
+token, which is why Jamba runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0          # 0 = ceil(d_model / 16)
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or int(np.ceil(self.d_model / 16))
+
+
+def init_mamba(key, cfg: MambaConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    di, ds, r = cfg.d_inner, cfg.d_state, cfg.rank
+    s = 1.0 / np.sqrt(cfg.d_model)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (cfg.d_model, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) / np.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * ds)) / np.sqrt(di)).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, di)) / np.sqrt(r)).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 1e-2))).astype(jnp.float32),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di, 1), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, cfg.d_model)) / np.sqrt(di)).astype(dtype),
+    }
+
+
+def _ssm_inputs(params: dict, cfg: MambaConfig, xc: jax.Array):
+    """xc: (B, T, d_inner) post-conv.  Returns dt (B,T,di), B/C (B,T,ds)."""
+    r, ds = cfg.rank, cfg.d_state
+    proj = xc @ params["x_proj"]
+    dt_r, b, c = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus((dt_r @ params["dt_proj"]).astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _scan_chunked(cfg: MambaConfig, a_log: jax.Array, dt: jax.Array,
+                  xc: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
+                  h0: jax.Array):
+    """Selective-scan recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+    with the output projection y_t = C_t . h_t FUSED into the chunk loop.
+
+    Memory discipline: the (B, q, di, ds) state tensors exist only per
+    CHUNK — the full-T (B, T, di, ds) a/b/h tensors are never materialized
+    (they dominated jamba train_4k HBM before this fusion; EXPERIMENTS.md
+    §Perf #12).  Inputs: dt (B,T,di) f32, xc (B,T,di), b/c (B,T,ds) f32.
+    Returns (y (B, T, di) f32, h_last (B, di, ds))."""
+    bsz, t, di = dt.shape
+    ds = b_mat.shape[-1]
+    q = min(cfg.chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    a = -jnp.exp(a_log)                                  # (di, ds)
+
+    def chunk(v):
+        return v.reshape(bsz, nc, q, v.shape[-1]).swapaxes(0, 1)
+
+    def combine(u, v):
+        (a1, b1), (a2, b2) = u, v
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, inp):
+        dt_c, xc_c, b_c, c_c = inp                       # (B, q, .)
+        a_coef = jnp.exp(dt_c[..., None] * a)            # (B, q, di, ds)
+        b_in = (dt_c * xc_c.astype(jnp.float32))[..., None] \
+            * b_c[:, :, None, :]
+        aa, bb = jax.lax.associative_scan(combine, (a_coef, b_in), axis=1)
+        h_all = aa * h[:, None] + bb                     # (B, q, di, ds)
+        y = jnp.einsum("bqds,bqs->bqd", h_all, c_c)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0,
+        (chunk(dt), chunk(xc), chunk(b_mat), chunk(c_mat)))
+    y = ys.swapaxes(0, 1).reshape(bsz, t, di)
+    return y, h_last
+
+
+def _conv(params: dict, cfg: MambaConfig, x: jax.Array,
+          state: jax.Array | None = None):
+    """Causal depthwise conv.  x: (B, T, di).  state: (B, d_conv-1, di)."""
+    w = params["conv_w"].astype(x.dtype)            # (d_conv, di)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cfg.d_conv - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, T+dc-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cfg.d_conv))
+    new_state = xp[:, -(cfg.d_conv - 1):] if cfg.d_conv > 1 else pad
+    return jax.nn.silu(out + params["conv_b"].astype(x.dtype)), new_state
+
+
+def mamba_block(params: dict, cfg: MambaConfig, x: jax.Array) -> jax.Array:
+    """Training/prefill.  x: (B, T, D) -> (B, T, D)."""
+    bsz, t, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _conv(params, cfg, xi)
+    dt, b_mat, c_mat = _ssm_inputs(params, cfg, xc)
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+    y, _ = _scan_chunked(cfg, params["a_log"], dt, xc, b_mat, c_mat, h0)
+    y = y + xc.astype(jnp.float32) * params["d_skip"][:, 0]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba_state(cfg: MambaConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def decode_mamba(params: dict, cfg: MambaConfig, x: jax.Array,
+                 state: dict) -> tuple[jax.Array, dict]:
+    """One-token step.  x: (B, 1, D)."""
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv(params, cfg, xi, state["conv"])
+    dt, b_mat, c_mat = _ssm_inputs(params, cfg, xc)
+    a = -jnp.exp(params["a_log"])
+    a_coef = jnp.exp(dt[:, 0, :, None] * a)         # (B,di,ds)
+    b_in = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * b_mat[:, 0, None, :]
+    h = a_coef * state["ssm"] + b_in
+    y = jnp.einsum("bds,bs->bd", h, c_mat[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * params["d_skip"][:, 0]
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return y @ params["out_proj"], {"conv": conv_state, "ssm": h}

@@ -1,0 +1,135 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are produced through low-rank compressions:
+
+  q:  x -> (q_lora 1536) -> norm -> per-head [nope 128 | rope 64]
+  kv: x -> (kv_lora 512 | k_rope 64);  kv_lora -> norm -> per-head
+      [k_nope 128 | v 128];  k_rope is shared across heads.
+
+Decode caches ONLY the compressed (c_kv, k_rope) pair — 576 values/token
+instead of 2 * H * 128 = 32768 — which is MLA's entire point.  The decode
+path uses the "absorbed" formulation: W_kb is folded into the query and
+output projections so attention runs directly in the 512-dim latent space:
+
+  score_t = (q_nope W_kb^K)   . c_kv_t   + q_rope . k_rope_t
+  out     = (sum_t p_t c_kv_t) W_kb^V
+
+FLOPs per decoded token drop from O(S * H * 256) expansion to
+O(S * (512 + 64)) per head-group — the same trick the serving systems use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -2.0 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10_000.0
+
+
+def init_mla(key, cfg: MLAConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    h = cfg.n_heads
+    qd = cfg.nope_dim + cfg.rope_dim
+    s = 1.0 / np.sqrt(cfg.d_model)
+    return {
+        "wq_a": (jax.random.normal(ks[0], (cfg.d_model, cfg.q_lora)) * s).astype(dtype),
+        "wq_b": (jax.random.normal(ks[1], (cfg.q_lora, h * qd))
+                 / np.sqrt(cfg.q_lora)).astype(dtype),
+        "wkv_a": (jax.random.normal(ks[2], (cfg.d_model, cfg.kv_lora + cfg.rope_dim)) * s).astype(dtype),
+        "wkv_b": (jax.random.normal(ks[3], (cfg.kv_lora, h * (cfg.nope_dim + cfg.v_dim)))
+                  / np.sqrt(cfg.kv_lora)).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (h * cfg.v_dim, cfg.d_model))
+               / np.sqrt(h * cfg.v_dim)).astype(dtype),
+        "q_a_norm": jnp.zeros((cfg.q_lora,), jnp.float32),
+        "kv_a_norm": jnp.zeros((cfg.kv_lora,), jnp.float32),
+    }
+
+
+def _project(params: dict, cfg: MLAConfig, x: jax.Array, positions):
+    """Returns per-head q (nope|rope) and the compressed kv streams."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rms_norm(x @ params["wq_a"], params["q_a_norm"])
+    q = (cq @ params["wq_b"]).reshape(b, s, h, cfg.nope_dim + cfg.rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_a_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]          # (B,S,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params: dict, cfg: MLAConfig, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Training/prefill: expand kv per head (compute-optimal at long S),
+    then run the shared memory-efficient chunked attention with the rope
+    part concatenated onto the nope head dim (k_rope broadcast per head)."""
+    from repro.models.attention import _sdpa
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _project(params, cfg, x, positions)
+    kvb = params["wkv_b"].reshape(cfg.kv_lora, h, cfg.nope_dim + cfg.v_dim)
+    k_nope = jnp.einsum("bsc,chd->bshd", c_kv, kvb[..., :cfg.nope_dim])
+    v = jnp.einsum("bsc,chd->bshd", c_kv, kvb[..., cfg.nope_dim:])
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)     # (B,S,H,nope+rope)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.rope_dim))], axis=-1)
+    scale = 1.0 / np.sqrt(cfg.nope_dim + cfg.rope_dim)
+    out = _sdpa(q_cat, k_cat, v, scale)
+    return out @ params["wo"]
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_dim), dtype),
+    }
+
+
+def decode_mla(params: dict, cfg: MLAConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed-matrix one-token decode over the compressed cache."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _project(params, cfg, x, positions)
+    length = cache["c_kv"].shape[1]
+    slot = jnp.minimum(pos, length - 1)
+    c_kv = cache["c_kv"].at[:, slot].set(c_kv_new[:, 0])
+    k_rope = cache["k_rope"].at[:, slot].set(k_rope_new[:, 0])
+
+    kvb = params["wkv_b"].reshape(cfg.kv_lora, h, cfg.nope_dim + cfg.v_dim)
+    wk, wv = kvb[..., :cfg.nope_dim], kvb[..., cfg.nope_dim:]
+    # absorb W_kb^K into the query: q_c (B,1,H,kv_lora)
+    q_c = jnp.einsum("bshd,chd->bshc", q_nope, wk)
+    scale = 1.0 / np.sqrt(cfg.nope_dim + cfg.rope_dim)
+    logits = (jnp.einsum("bshc,btc->bhst", q_c, c_kv)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
+              ).astype(jnp.float32) * scale
+    valid = jnp.arange(length) <= pos
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btc->bshc", probs.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bshc,chd->bshd", ctx, wv).reshape(b, 1, h * cfg.v_dim)
+    return out @ params["wo"], {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,431 @@
+"""Generic decoder LM assembled from a periodic block pattern.
+
+A ModelConfig (configs/base.py) names a `pattern`: the repeating unit of
+blocks (each block = mixer + ffn + norms).  Parameters for each position in
+the pattern are STACKED over the number of periods, and the forward pass is
+a lax.scan over periods (per pattern position) — keeping the HLO small and
+compile times flat regardless of depth, which matters for the 512-device
+dry-run compiles.
+
+Prefix layers (deepseek's 3 dense-FFN layers before the MoE stack) are a
+second, independent pattern scanned separately.
+
+Heads: "dense" (standard unembedding) or "loghd" (the paper's class-axis
+compression applied to the vocab classifier — bundles (n, D) + profiles
+(V, n); logits are profile-decode scores).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (dense_head_logits, embed, gated_mlp,
+                                 init_dense_head, init_embed, init_gated_mlp,
+                                 init_rms, rms_norm)
+from repro.configs.base import BlockSpec, ModelConfig
+
+
+# --------------------------------------------------------------- builders ---
+
+def _mixer_cfg(cfg: ModelConfig, blk: BlockSpec):
+    if blk.mixer in ("attn", "attn_local"):
+        return attn_lib.AttnConfig(
+            d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias,
+            rope_theta=cfg.rope_theta,
+            window=cfg.local_window if blk.mixer == "attn_local" else None)
+    if blk.mixer == "mla":
+        return mla_lib.MLAConfig(
+            d_model=cfg.d_model, n_heads=cfg.n_heads,
+            q_lora=cfg.mla_q_lora, kv_lora=cfg.mla_kv_lora,
+            nope_dim=cfg.mla_nope_dim, rope_dim=cfg.mla_rope_dim,
+            v_dim=cfg.mla_v_dim, rope_theta=cfg.rope_theta)
+    if blk.mixer == "mamba":
+        return mamba_lib.MambaConfig(d_model=cfg.d_model)
+    if blk.mixer in ("mlstm", "slstm"):
+        return xlstm_lib.XLSTMConfig(d_model=cfg.d_model,
+                                     n_heads=cfg.n_kv_heads)
+    raise ValueError(blk.mixer)
+
+
+def _ffn_cfg(cfg: ModelConfig, blk: BlockSpec):
+    if blk.ffn == "moe":
+        return moe_lib.MoEConfig(
+            d_model=cfg.d_model, d_ff=cfg.moe_d_ff, n_experts=cfg.n_experts,
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            shared_expert_ff=cfg.shared_expert_ff)
+    return None
+
+
+def _init_block(key, cfg: ModelConfig, blk: BlockSpec, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"ln1": init_rms(cfg.d_model)}
+    mc = _mixer_cfg(cfg, blk)
+    if blk.mixer in ("attn", "attn_local"):
+        p["attn"] = attn_lib.init_attn(k1, mc, dtype)
+    elif blk.mixer == "mla":
+        p["mla"] = mla_lib.init_mla(k1, mc, dtype)
+    elif blk.mixer == "mamba":
+        p["mamba"] = mamba_lib.init_mamba(k1, mc, dtype)
+    elif blk.mixer == "mlstm":
+        p["mlstm"] = xlstm_lib.init_mlstm(k1, mc, dtype)
+    elif blk.mixer == "slstm":
+        p["slstm"] = xlstm_lib.init_slstm(k1, mc, dtype)
+    if blk.ffn != "none":
+        p["ln2"] = init_rms(cfg.d_model)
+    if blk.ffn == "dense":
+        p["mlp"] = init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif blk.ffn == "moe":
+        p["moe"] = moe_lib.init_moe(k2, _ffn_cfg(cfg, blk), dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_embed(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": init_rms(cfg.d_model),
+    }
+    # prefix layers (unrolled stack of size n_prefix)
+    if cfg.prefix_pattern:
+        ppat = cfg.prefix_pattern
+        stacks = []
+        for rep in range(cfg.n_prefix // len(ppat)):
+            for bi, blk in enumerate(ppat):
+                k = jax.random.fold_in(keys[1], rep * len(ppat) + bi)
+                stacks.append(_init_block(k, cfg, blk, dtype))
+        params["prefix"] = [
+            jax.tree.map(lambda *xs: jnp.stack(xs), *stacks[i::len(ppat)])
+            for i in range(len(ppat))]
+    # periodic body: one stacked subtree per pattern position
+    body = []
+    for bi, blk in enumerate(cfg.pattern):
+        stacks = [
+            _init_block(jax.random.fold_in(keys[2], per * 37 + bi), cfg, blk,
+                        dtype)
+            for per in range(cfg.n_periods)]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacks))
+    params["body"] = body
+    # head
+    if cfg.head == "dense":
+        params["head"] = init_dense_head(keys[3], cfg.d_model, cfg.vocab, dtype)
+    elif cfg.head == "loghd":
+        n = cfg.loghd_bundles
+        params["head"] = {
+            "bundles": (jax.random.normal(keys[3], (n, cfg.d_model))
+                        / np.sqrt(cfg.d_model)).astype(dtype),
+            "profiles": (jax.random.normal(keys[4], (cfg.vocab, n))
+                         * 0.05).astype(dtype),
+        }
+    else:
+        raise ValueError(cfg.head)
+    return params
+
+
+# ---------------------------------------------------------------- forward ---
+
+def _apply_block(params: dict, cfg: ModelConfig, blk: BlockSpec,
+                 x: jax.Array, positions: jax.Array,
+                 mesh: Optional[Mesh]) -> tuple[jax.Array, jax.Array]:
+    """Residual block: x + mixer(ln(x)); x + ffn(ln(x)).  Returns (x, aux).
+
+    The returned activation is sharding-hinted so that the scan-over-layers
+    CARRY — which jax saves per layer for the backward pass and which
+    otherwise dominates training HBM (0.5 GB/layer at train_4k) — is stored
+    model-sharded.  cfg.activation_sharding picks the axis: "seq"
+    (sequence-parallel; the MLP consumes it with no regather and attention
+    only regathers k/v) or "d" (Megatron-style, regathered at every matmul).
+    Measured at qwen3 train_4k x 256 chips: none=21.8 GiB/dev,
+    d=5.1 GiB, seq=4.1 GiB."""
+    from repro.models.sharding import hint
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, params["ln1"])
+    mc = _mixer_cfg(cfg, blk)
+    if blk.mixer in ("attn", "attn_local"):
+        mixed = attn_lib.attention(params["attn"], mc, h, positions)
+    elif blk.mixer == "mla":
+        mixed = mla_lib.mla_attention(params["mla"], mc, h, positions)
+    elif blk.mixer == "mamba":
+        mixed = mamba_lib.mamba_block(params["mamba"], mc, h)
+    elif blk.mixer == "mlstm":
+        mixed = xlstm_lib.mlstm_block(params["mlstm"], mc, h)
+    elif blk.mixer == "slstm":
+        mixed = xlstm_lib.slstm_block(params["slstm"], mc, h)
+    x = x + mixed.astype(x.dtype)   # keep the scan carry dtype stable
+    if blk.ffn == "dense":
+        x = x + gated_mlp(params["mlp"], rms_norm(x, params["ln2"]))
+    elif blk.ffn == "moe":
+        y, aux = moe_lib.moe_block(params["moe"], _ffn_cfg(cfg, blk),
+                                   rms_norm(x, params["ln2"]), mesh)
+        x = x + y
+    if cfg.activation_sharding == "seq":
+        x = hint(x, ("pod", "data"), "model", None)
+    elif cfg.activation_sharding == "d":
+        x = hint(x, ("pod", "data"), None, "model")
+    return x, aux
+
+
+def head_logits(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (..., D) -> (..., V) f32 logits."""
+    if cfg.head == "dense":
+        return dense_head_logits(params["head"], x)
+    # LogHD head: activation vs bundles, then profile-decode scores.
+    # (the Pallas kernels implement exactly this fused; the jnp form below is
+    # what jit/pjit traces for the distributed dry-run.)
+    m = params["head"]["bundles"]
+    p = params["head"]["profiles"].astype(jnp.float32)
+    a = (x @ m.T).astype(jnp.float32)                       # (..., n)
+    return (2.0 * a @ p.T - jnp.sum(p * p, axis=-1)
+            - jnp.sum(a * a, axis=-1, keepdims=True))
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            mesh: Optional[Mesh] = None, *,
+            embeddings: Optional[jax.Array] = None):
+    """tokens: (B, S) int32 (or `embeddings` (B, S, D) from a frontend stub).
+    Returns (logits (B, S, V) f32, aux_loss scalar)."""
+    x, aux_total = _backbone(params, cfg, tokens, mesh, embeddings)
+    return head_logits(params, cfg, x), aux_total
+
+
+def _backbone(params, cfg, tokens, mesh, embeddings):
+    """Everything up to (but excluding) the head: (B, S, D) final hidden."""
+    from repro.models.sharding import set_context_mesh
+    set_context_mesh(mesh)
+    x = embed(params["embed"], tokens) if embeddings is None else embeddings
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    remat = cfg.remat_policy
+    def block_fn(p, x, blk):
+        return _apply_block(p, cfg, blk, x, positions, mesh)
+    if remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if remat == "full" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        block_fn = jax.checkpoint(block_fn, policy=policy,
+                                  static_argnums=(2,))
+
+    for i, stacked in enumerate(params.get("prefix", [])):
+        blk = cfg.prefix_pattern[i]
+        def scan_p(x, p, blk=blk):
+            return block_fn(p, x, blk)
+        x, auxs = jax.lax.scan(scan_p, x, stacked)
+        aux_total += jnp.sum(auxs)
+
+    body = params["body"]
+    stacked = {f"pos{i}": t for i, t in enumerate(body)}
+
+    def period_fn(x, period_params):
+        aux = jnp.zeros((), jnp.float32)
+        for i, blk in enumerate(cfg.pattern):
+            x, a = block_fn(period_params[f"pos{i}"], x, blk)
+            aux += a
+        return x, aux
+
+    x, auxs = jax.lax.scan(period_fn, x, stacked)
+    aux_total += jnp.sum(auxs)
+    return rms_norm(x, params["final_norm"]), aux_total
+
+
+def _xent_from_logits(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Summed token NLL; logits f32 (B, S, V).
+
+    The target logit is picked with a one-hot einsum rather than
+    take_along_axis: with V sharded on "model" the einsum partitions
+    cleanly (partial contraction + all-reduce) while a gather on the
+    sharded axis forces an all-gather of the logits."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    tgt = jnp.einsum("...v,...v->...", onehot, logits)
+    return jnp.sum(lse - tgt)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            targets: jax.Array, mesh: Optional[Mesh] = None,
+            embeddings: Optional[jax.Array] = None) -> jax.Array:
+    x, aux = _backbone(params, cfg, tokens, mesh, embeddings)
+    b, s, _ = x.shape
+    chunk = cfg.loss_chunk
+    if chunk and s > chunk and s % chunk == 0:
+        # seq-chunked CE: the (B, chunk, V) logits transient is rematerial-
+        # ized per chunk in both fwd and bwd, bounding HBM at huge vocabs.
+        nc = s // chunk
+        xc = x.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+        tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_nll(xi, ti):
+            return _xent_from_logits(head_logits(params, cfg, xi), ti)
+
+        def scan_chunk(acc, inp):
+            xi, ti = inp
+            return acc + chunk_nll(xi, ti), None
+        total, _ = jax.lax.scan(scan_chunk, jnp.zeros(()), (xc, tc))
+        return total / (b * s) + aux
+    logits = head_logits(params, cfg, x)
+    return _xent_from_logits(logits, targets) / (b * s) + aux
+
+
+# ----------------------------------------------------------------- decode ---
+
+def _init_block_state(cfg: ModelConfig, blk: BlockSpec, batch: int,
+                      max_len: int, dtype, *, seq_shards: int = 1):
+    mc = _mixer_cfg(cfg, blk)
+    if blk.mixer in ("attn", "attn_local"):
+        return attn_lib.init_kv_cache(mc, batch, max_len // seq_shards
+                                      if blk.mixer == "attn" else max_len,
+                                      dtype)
+    if blk.mixer == "mla":
+        return mla_lib.init_mla_cache(mc, batch, max_len, dtype)
+    if blk.mixer == "mamba":
+        return mamba_lib.init_mamba_state(mc, batch, dtype)
+    if blk.mixer == "mlstm":
+        return xlstm_lib.init_mlstm_state(mc, batch)
+    if blk.mixer == "slstm":
+        return xlstm_lib.init_slstm_state(mc, batch)
+    raise ValueError(blk.mixer)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      *, seq_shards: int = 1) -> dict:
+    """Pytree of per-layer decode caches/states."""
+    dtype = jnp.dtype(cfg.dtype)
+    state: dict[str, Any] = {}
+    if cfg.prefix_pattern:
+        state["prefix"] = [
+            jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_block_state(cfg, blk, batch, max_len, dtype,
+                                    seq_shards=seq_shards)
+                  for _ in range(cfg.n_prefix // len(cfg.prefix_pattern))])
+            for blk in cfg.prefix_pattern]
+    state["body"] = [
+        jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_block_state(cfg, blk, batch, max_len, dtype,
+                                seq_shards=seq_shards)
+              for _ in range(cfg.n_periods)])
+        for blk in cfg.pattern]
+    return state
+
+
+def _decode_block(params: dict, cfg: ModelConfig, blk: BlockSpec,
+                  x: jax.Array, st, pos: jax.Array, mesh: Optional[Mesh],
+                  seq_sharded: bool):
+    h = rms_norm(x, params["ln1"])
+    mc = _mixer_cfg(cfg, blk)
+    if blk.mixer in ("attn", "attn_local"):
+        if seq_sharded and blk.mixer == "attn":
+            mixed, st = attn_lib.decode_attention_seqsharded(
+                params["attn"], mc, h, st, pos)
+        else:
+            mixed, st = attn_lib.decode_attention(params["attn"], mc, h, st, pos)
+    elif blk.mixer == "mla":
+        mixed, st = mla_lib.decode_mla(params["mla"], mc, h, st, pos)
+    elif blk.mixer == "mamba":
+        mixed, st = mamba_lib.decode_mamba(params["mamba"], mc, h, st)
+    elif blk.mixer == "mlstm":
+        mixed, st = xlstm_lib.decode_mlstm(params["mlstm"], mc, h, st)
+    elif blk.mixer == "slstm":
+        mixed, st = xlstm_lib.decode_slstm(params["slstm"], mc, h, st)
+    x = x + mixed
+    if blk.ffn == "dense":
+        x = x + gated_mlp(params["mlp"], rms_norm(x, params["ln2"]))
+    elif blk.ffn == "moe":
+        y, _ = moe_lib.moe_block(params["moe"], _ffn_cfg(cfg, blk),
+                                 rms_norm(x, params["ln2"]), mesh)
+        x = x + y
+    return x, st
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict,
+                tokens: jax.Array, pos: jax.Array,
+                mesh: Optional[Mesh] = None, *, seq_sharded: bool = False,
+                embeddings: Optional[jax.Array] = None):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, 1, V), new state)."""
+    from repro.models.sharding import set_context_mesh
+    set_context_mesh(mesh)
+    x = embed(params["embed"], tokens) if embeddings is None else embeddings
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    new_state: dict[str, Any] = {"body": []}
+
+    if cfg.prefix_pattern:
+        new_state["prefix"] = []
+        for i, stacked in enumerate(params.get("prefix", [])):
+            blk = cfg.prefix_pattern[i]
+
+            def scan_p(x, inp, blk=blk):
+                p, st = inp
+                x, st = _decode_block(p, cfg, blk, x, st, pos, mesh,
+                                      seq_sharded)
+                return x, st
+            x, sts = jax.lax.scan(scan_p, x, (stacked, state["prefix"][i]))
+            new_state["prefix"].append(sts)
+
+    for i, blk in enumerate(cfg.pattern):
+        stacked = params["body"][i]
+
+        def scan_b(x, inp, blk=blk):
+            p, st = inp
+            x, st = _decode_block(p, cfg, blk, x, st, pos, mesh, seq_sharded)
+            return x, st
+        x, sts = jax.lax.scan(scan_b, x, (stacked, state["body"][i]))
+        new_state["body"].append(sts)
+
+    x = rms_norm(x, params["final_norm"])
+    return head_logits(params, cfg, x), new_state
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            mesh: Optional[Mesh] = None,
+            embeddings: Optional[jax.Array] = None):
+    """Prefill forward (same compute as training fwd, no loss): returns the
+    last-position logits — cache construction for generation is exercised by
+    decode_step; the dry-run's prefill cell measures the forward cost."""
+    logits, _ = forward(params, cfg, tokens, mesh, embeddings=embeddings)
+    return logits[:, -1:]
+
+
+class Model:
+    """Thin OO facade used by examples and the serving loop."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+
+    def init(self, seed: int = 0):
+        return init_params(jax.random.PRNGKey(seed), self.cfg)
+
+    def loss(self, params, tokens, targets):
+        return loss_fn(params, self.cfg, tokens, targets, self.mesh)
+
+    def forward(self, params, tokens):
+        return forward(params, self.cfg, tokens, self.mesh)
+
+
+def param_specs(cfg: ModelConfig):
+    """PartitionSpec tree for params (via sharding rules on an eval_shape)."""
+    from repro.models.sharding import tree_specs
+    shapes = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return tree_specs(shapes)

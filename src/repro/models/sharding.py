@@ -1,0 +1,192 @@
+"""Path-based sharding rules: parameter/activation PartitionSpecs.
+
+Meshes (launch/mesh.py):
+  single-pod:  (data=16, model=16)
+  multi-pod:   (pod=2, data=16, model=16)
+
+Strategy (1000+-chip posture):
+  * "pod"   — pure data parallelism; gradients cross the pod boundary once
+              per step (or per microbatch with accumulation).
+  * "data"  — FSDP: every weight is sharded along its d_model-like axis on
+              "data"; XLA SPMD inserts the per-layer all-gathers (overlapped
+              with compute inside scan) and reduce-scatters for grads.
+  * "model" — tensor parallelism: heads / ffn-hidden / experts / vocab.
+
+Rules are applied by leaf path name, t5x-style, so module code never
+hand-writes specs.  The first matching rule wins.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex over "/"-joined path, spec builder) — spec axes reference logical
+# mesh names; ("data",) FSDP axis and ("model",) TP axis.
+# NOTE: leading stack axes (scan over layers/periods) are added automatically
+# by param_specs when the leaf has one more dim than the rule's spec.
+_RULES: list[tuple[str, P]] = [
+    # embeddings / dense head: vocab on model, d_model on data
+    (r"embed/table$",              P("model", "data")),
+    (r"head/w$",                   P("data", "model")),
+    # LogHD head: bundles tiny in n — shard D on data; profiles vocab on model
+    (r"head/bundles$",             P(None, "data")),
+    (r"head/profiles$",            P("model", None)),
+    # attention projections: (D, heads*hd) / (heads*hd, D)
+    (r"attn/(wq|wk|wv)$",          P("data", "model")),
+    (r"attn/wo$",                  P("model", "data")),
+    (r"attn/(bq|bk|bv)$",          P("model",)),
+    (r"attn/(qnorm|knorm)$",       P(None,)),
+    # MLA: lora-rank axes replicated, expanded head axes on model
+    (r"mla/(wq_a|wkv_a)$",         P("data", None)),
+    (r"mla/(wq_b|wkv_b)$",         P(None, "model")),
+    (r"mla/wo$",                   P("model", "data")),
+    (r"mla/(q_a_norm|kv_a_norm)$", P(None,)),
+    # dense mlp: (D, F) with F on model
+    (r"mlp/(wi|wg)$",              P("data", "model")),
+    (r"mlp/wo$",                   P("model", "data")),
+    # MoE: experts on model (EP); per-expert matrices FSDP on data
+    (r"moe/router$",               P(None, None)),
+    (r"moe/(wi|wg)$",              P("model", "data", None)),
+    (r"moe/wo$",                   P("model", None, "data")),
+    (r"moe/shared_(wi|wg)$",       P("data", "model")),
+    (r"moe/shared_wo$",            P("model", "data")),
+    # mamba: d_inner on model, d_model-ish axes on data
+    (r"mamba/in_proj$",            P("data", "model")),
+    (r"mamba/conv_w$",             P(None, "model")),
+    (r"mamba/conv_b$",             P("model",)),
+    (r"mamba/x_proj$",             P("model", None)),
+    (r"mamba/dt_proj$",            P(None, "model")),
+    (r"mamba/(a_log|d_skip)$",     P("model", None)),
+    (r"mamba/dt_bias$",            P("model",)),
+    (r"mamba/out_proj$",           P("model", "data")),
+    # xLSTM
+    (r"mlstm/up_proj$",            P("data", "model")),
+    (r"mlstm/(wq|wk|wv)$",         P("data", "model")),
+    (r"mlstm/(wi|wf|wo_gate)$",    P("data", "model")),
+    (r"mlstm/down_proj$",          P("model", "data")),
+    (r"mlstm/skip_w$",             P("model",)),
+    (r"slstm/(wz|wi|wf|wo)$",      P("data", "model")),
+    (r"slstm/(rz|ri|rf|ro)$",      P(None, "model")),
+    (r"slstm/(bz|bi|bf|bo)$",      P("model",)),
+    (r"slstm/(up_proj)$",          P("data", "model")),
+    (r"slstm/(down_proj)$",        P("model", "data")),
+    # norms / scalars: replicated
+    (r"(ln1|ln2|ln3|norm|final_norm|scale|.*_norm)$", P(None,)),
+    (r"frontend/.*$",              P(None, None)),
+]
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    """Find the rule for a leaf path; pad leading stack axes with None."""
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            pads = ndim - len(spec)
+            if pads < 0:
+                # rule has more axes than the leaf (e.g. scalar norm): trim
+                return P(*tuple(spec)[:ndim])
+            return P(*((None,) * pads + tuple(spec)))
+    # default: replicate
+    return P(*((None,) * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def tree_specs(tree) -> dict:
+    """PartitionSpec pytree matching `tree` (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), len(leaf.shape)),
+        tree)
+
+
+def _guard_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't evenly divide (e.g. 4 mLSTM gate
+    heads on a 16-way model axis; granite's 49155 vocab)."""
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(entry if (dim % size == 0 and dim >= size) else None)
+    return P(*fixed)
+
+
+def tree_shardings(tree, mesh: Mesh) -> dict:
+    return jax.tree.map(
+        lambda leaf, s: NamedSharding(mesh, _guard_spec(s, leaf.shape, mesh)),
+        tree, tree_specs(tree))
+
+
+# ---- activation sharding hints -------------------------------------------
+# XLA SPMD propagates most activation shardings from the weight shardings,
+# but fails across some reshape chains (notably (B,S,H*hd) -> (B,S,KV,G,hd)
+# in grouped attention), silently replicating the (B,H,S,S) probs — 68 GB/dev
+# at train_4k scale.  Model code calls hint() at those points; it is a no-op
+# unless a context mesh was installed by forward()/loss_fn().
+
+_CONTEXT_MESH: list[Optional[Mesh]] = [None]
+
+
+def set_context_mesh(mesh: Optional[Mesh]):
+    _CONTEXT_MESH[0] = mesh
+
+
+def get_context_mesh() -> Optional[Mesh]:
+    return _CONTEXT_MESH[0]
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the context mesh (no-op without
+    one).  Axes named in `spec` that don't divide the corresponding dim are
+    dropped to None."""
+    mesh = _CONTEXT_MESH[0]
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(axes if (axes and dim % size == 0 and dim >= size)
+                     else None)
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def dp_axes_of(mesh: Optional[Mesh]) -> tuple:
+    if mesh is None:
+        return ()
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Tokens (B, S): batch over all data-parallel axes."""
+    axes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    return P(axes, None)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """(B, S, D) activations: batch over dp axes, D replicated."""
+    axes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    return P(axes, None, None)

@@ -1,0 +1,247 @@
+"""xLSTM blocks (mLSTM + sLSTM), for the xlstm-125m architecture.
+
+mLSTM — matrix-memory LSTM with exponential gating, parallelizable:
+  C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t
+  y_t = C_t q_t / max(|n_t^T q_t|, 1)
+  computed CHUNKWISE: full attention-like parallel form inside a chunk
+  (scores q_i k_j * exp(cumlogf_i - cumlogf_j + log i_j), stabilized by a
+  running max m), recurrent (C, n, m) state across chunks.  This is the
+  TPU-native equivalent of the paper's fused CUDA kernel: the chunk-local
+  computation is MXU matmuls, the cross-chunk state is a lax.scan carry.
+
+sLSTM — scalar-memory LSTM with exponential gating and recurrent gate
+  weights; inherently sequential, computed with lax.scan over time.  Kept
+  per the 125M reference config (sLSTM at every 4th block).
+
+Both blocks carry O(1) state per token, so the arch runs long_500k decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0     # mLSTM up-projection
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ----------------------------------------------------------------- mLSTM ---
+
+def init_mlstm(key, cfg: XLSTMConfig, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    d, di = cfg.d_model, cfg.d_inner
+    s, si = 1.0 / np.sqrt(d), 1.0 / np.sqrt(di)
+    return {
+        "up_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "wq": (jax.random.normal(ks[1], (di, di)) * si).astype(dtype),
+        "wk": (jax.random.normal(ks[2], (di, di)) * si).astype(dtype),
+        "wv": (jax.random.normal(ks[3], (di, di)) * si).astype(dtype),
+        "wi": (jax.random.normal(ks[4], (di, cfg.n_heads)) * si).astype(dtype),
+        "wf": (jax.random.normal(ks[5], (di, cfg.n_heads)) * si).astype(dtype),
+        "skip_w": jnp.ones((di,), jnp.float32),
+        "down_proj": (jax.random.normal(ks[6], (di, d)) * si).astype(dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state):
+    """One chunk of the parallel mLSTM.
+    q/k/v: (B, H, Q, hd); log_i/log_f: (B, H, Q); state: (C, n, m)."""
+    c_prev, n_prev, m_prev = state
+    bsz, h, qlen, hd = q.shape
+    lf_cum = jnp.cumsum(log_f, axis=-1)                       # (B,H,Q)
+    # intra-chunk decay matrix: D_ij = lf_cum_i - lf_cum_j + log_i_j  (j<=i)
+    d_mat = (lf_cum[..., :, None] - lf_cum[..., None, :]
+             + log_i[..., None, :])                           # (B,H,Q,Q)
+    tri = jnp.tril(jnp.ones((qlen, qlen), bool))
+    d_mat = jnp.where(tri, d_mat, -jnp.inf)
+    # inter-chunk contribution carries decay lf_cum_i + m_prev
+    m_inter = lf_cum + m_prev[..., None]                      # (B,H,Q)
+    m_intra = jnp.max(d_mat, axis=-1)                         # (B,H,Q)
+    m_t = jnp.maximum(m_inter, m_intra)                       # running max
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    w = scores * jnp.exp(d_mat - m_t[..., None])
+    inter_w = jnp.exp(m_inter - m_t)                          # (B,H,Q)
+    num = (jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)
+           + inter_w[..., None].astype(v.dtype)
+           * jnp.einsum("bhqd,bhde->bhqe", q, c_prev.astype(q.dtype)) * scale)
+    den = (jnp.sum(w, axis=-1)
+           + inter_w * jnp.einsum("bhqd,bhd->bhq", q, n_prev.astype(q.dtype))
+           * scale)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None].astype(v.dtype)
+    # state update to the end of the chunk
+    lf_total = lf_cum[..., -1]                                # (B,H)
+    m_new = jnp.maximum(lf_total + m_prev, jnp.max(
+        lf_total[..., None] - lf_cum + log_i, axis=-1))
+    decay_old = jnp.exp(lf_total + m_prev - m_new)            # (B,H)
+    tok_w = jnp.exp(lf_total[..., None] - lf_cum + log_i - m_new[..., None])
+    c_new = (decay_old[..., None, None] * c_prev
+             + jnp.einsum("bhq,bhqd,bhqe->bhde",
+                          tok_w, k.astype(jnp.float32), v.astype(jnp.float32)))
+    n_new = (decay_old[..., None] * n_prev
+             + jnp.einsum("bhq,bhqd->bhd", tok_w, k.astype(jnp.float32)))
+    return y, (c_new, n_new, m_new)
+
+
+def _mlstm_qkvif(params, cfg: XLSTMConfig, xu: jax.Array):
+    bsz, t, di = xu.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    def heads(m):
+        return (xu @ m).reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+    q, k, v = heads(params["wq"]), heads(params["wk"]), heads(params["wv"])
+    log_i = (xu @ params["wi"]).astype(jnp.float32).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        (xu @ params["wf"]).astype(jnp.float32)).transpose(0, 2, 1)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_block(params: dict, cfg: XLSTMConfig, x: jax.Array) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D)."""
+    bsz, t, _ = x.shape
+    up = x @ params["up_proj"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, cfg, xu)
+    h, hd = cfg.n_heads, cfg.head_dim
+    qc = min(cfg.chunk, t)
+    assert t % qc == 0
+    nc = t // qc
+
+    def to_chunks(a, vec=False):
+        if vec:
+            return a.reshape(bsz, h, nc, qc).transpose(2, 0, 1, 3)
+        return a.reshape(bsz, h, nc, qc, hd).transpose(2, 0, 1, 3, 4)
+
+    state = (jnp.zeros((bsz, h, hd, hd), jnp.float32),
+             jnp.zeros((bsz, h, hd), jnp.float32),
+             jnp.zeros((bsz, h), jnp.float32))
+
+    def step(state, inp):
+        qq, kk, vv, li, lff = inp
+        y, state = _mlstm_chunk(qq, kk, vv, li, lff, state)
+        return state, y
+
+    _, ys = jax.lax.scan(step, state,
+                         (to_chunks(q), to_chunks(k), to_chunks(v),
+                          to_chunks(log_i, True), to_chunks(log_f, True)))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(bsz, h, t, hd)
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, t, cfg.d_inner)
+    y = y.astype(x.dtype)      # the stabilized division upcasts to f32
+    y = y + xu * params["skip_w"].astype(xu.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["down_proj"]
+
+
+def init_mlstm_state(cfg: XLSTMConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def decode_mlstm(params: dict, cfg: XLSTMConfig, x: jax.Array,
+                 state: dict) -> tuple[jax.Array, dict]:
+    """One-token recurrent step.  x: (B, 1, D)."""
+    up = x @ params["up_proj"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, cfg, xu)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]      # (B,H,hd)
+    li, lf = log_i[:, :, 0], log_f[:, :, 0]           # (B,H)
+    m_new = jnp.maximum(lf + state["m"], li)
+    decay = jnp.exp(lf + state["m"] - m_new)
+    inp_w = jnp.exp(li - m_new)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c = decay[..., None, None] * state["c"] + inp_w[..., None, None] \
+        * kf[..., :, None] * vf[..., None, :]
+    n = decay[..., None] * state["n"] + inp_w[..., None] * kf
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), c) * scale
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n) * scale
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(x.shape[0], 1, cfg.d_inner).astype(x.dtype)
+    y = y + xu * params["skip_w"].astype(xu.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["down_proj"], {"c": c, "n": n, "m": m_new}
+
+
+# ----------------------------------------------------------------- sLSTM ---
+
+def init_slstm(key, cfg: XLSTMConfig, dtype) -> dict:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    s = 1.0 / np.sqrt(d)
+    p = {}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = (jax.random.normal(ks[i], (d, d)) * s).astype(dtype)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (d, d)) * s).astype(dtype)
+        p[f"b{g}"] = jnp.zeros((d,), jnp.float32)
+    # GLU ffn: up to 2d, gate halves back to d, project d -> d
+    p["up_proj"] = (jax.random.normal(ks[8], (d, 2 * d)) * s).astype(dtype)
+    p["down_proj"] = (jax.random.normal(ks[9], (d, d)) * s).astype(dtype)
+    return p
+
+
+def _slstm_step(params, carry, x_t):
+    """x_t: (B, D); carry: (c, n, m, h_prev) each (B, D) f32."""
+    c, n, m, h_prev = carry
+    hp = h_prev.astype(x_t.dtype)
+    z = jnp.tanh((x_t @ params["wz"] + hp @ params["rz"]
+                  ).astype(jnp.float32) + params["bz"])
+    i_log = (x_t @ params["wi"] + hp @ params["ri"]).astype(jnp.float32) + params["bi"]
+    f_log = jax.nn.log_sigmoid(
+        (x_t @ params["wf"] + hp @ params["rf"]).astype(jnp.float32) + params["bf"])
+    o = jax.nn.sigmoid(
+        (x_t @ params["wo"] + hp @ params["ro"]).astype(jnp.float32) + params["bo"])
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_g = jnp.exp(i_log - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block(params: dict, cfg: XLSTMConfig, x: jax.Array) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D); sequential lax.scan over T."""
+    bsz, t, d = x.shape
+    carry = tuple(jnp.zeros((bsz, d), jnp.float32) for _ in range(4))
+
+    def step(carry, x_t):
+        return _slstm_step(params, carry, x_t)
+
+    _, hs = jax.lax.scan(step, carry, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)            # (B, T, D)
+    up = h @ params["up_proj"]
+    a, b = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ params["down_proj"]
+
+
+def init_slstm_state(cfg: XLSTMConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def decode_slstm(params: dict, cfg: XLSTMConfig, x: jax.Array,
+                 state: dict) -> tuple[jax.Array, dict]:
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, h = _slstm_step(params, carry, x[:, 0])
+    up = h.astype(x.dtype)[:, None] @ params["up_proj"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ params["down_proj"]
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}

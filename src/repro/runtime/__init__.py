@@ -1,0 +1,2 @@
+from repro.runtime.train_loop import TrainLoopConfig, run_training
+from repro.runtime.serve_loop import ServeLoopConfig, run_serving

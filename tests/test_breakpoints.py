@@ -1,0 +1,36 @@
+"""Break-point analyzer unit tests."""
+
+from benchmarks.breakpoints import breakpoints, parse_fig3, ratios
+
+
+def _rows():
+    lines = []
+    # loghd holds to 0.3; sparsehd breaks after 0.1
+    for p, a in [(0.0, 0.9), (0.1, 0.89), (0.2, 0.85), (0.3, 0.82),
+                 (0.4, 0.3)]:
+        lines.append(f"isolet,0.2,1,hv,loghd_k2,{p},{a}")
+    for p, a in [(0.0, 0.92), (0.1, 0.9), (0.2, 0.6), (0.3, 0.4),
+                 (0.4, 0.1)]:
+        lines.append(f"isolet,0.2,1,hv,sparsehd,{p},{a}")
+    return lines
+
+
+def test_parse_and_breakpoints():
+    rows = parse_fig3(_rows())
+    assert len(rows) == 10
+    bps = breakpoints(rows, drop=0.10)
+    assert bps[("isolet", 0.2, 1, "hv", "loghd_k2")] == (0.9, 0.3)
+    assert bps[("isolet", 0.2, 1, "hv", "sparsehd")] == (0.92, 0.1)
+
+
+def test_ratio_table():
+    bps = breakpoints(parse_fig3(_rows()), drop=0.10)
+    table = ratios(bps)
+    assert table == [("isolet", 0.2, 1, "hv", 0.3, 0.1, 3.0)]
+
+
+def test_non_monotone_curve_stops_at_first_failure():
+    lines = [f"ds,0.4,8,all,loghd_k2,{p},{a}" for p, a in
+             [(0.0, 0.9), (0.1, 0.5), (0.2, 0.9)]]  # recovery ignored
+    bps = breakpoints(parse_fig3(lines))
+    assert bps[("ds", 0.4, 8, "all", "loghd_k2")][1] == 0.0

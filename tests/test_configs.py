@@ -1,0 +1,63 @@
+"""Config fidelity: analytic parameter counts of the FULL configs land on
+the published model sizes (the dry-run exercises the real tensors; this
+guards the configs against dimension typos)."""
+
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import SHAPES
+
+# published total-parameter targets (embeddings included), +-25% tolerance
+# (sources in each config file header)
+TARGETS = {
+    "qwen3-1.7b": 2.0e9,          # 1.7B + untied 152k-vocab embed/head
+    "gemma3-4b": 4.3e9,
+    "mistral-nemo-12b": 12.2e9,
+    "qwen1.5-4b": 4.0e9,
+    "chameleon-34b": 34e9,
+    "xlstm-125m": 0.165e9,        # 125M + embed/head
+    "deepseek-v3-671b": 671e9,
+    "granite-moe-1b-a400m": 1.3e9,
+    "musicgen-large": 3.3e9,
+    "jamba-v0.1-52b": 52e9,
+}
+
+ACTIVE_TARGETS = {
+    "deepseek-v3-671b": 37e9,
+    "granite-moe-1b-a400m": 0.4e9 + 0.1e9,   # ~400M active + embeds
+    "jamba-v0.1-52b": 12e9,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_count_matches_published(arch):
+    got = get_config(arch).param_count()
+    want = TARGETS[arch]
+    assert 0.75 * want <= got <= 1.3 * want, (arch, got, want)
+
+
+@pytest.mark.parametrize("arch", sorted(ACTIVE_TARGETS))
+def test_active_params_moe(arch):
+    cfg = get_config(arch)
+    got = cfg.active_param_count()
+    want = ACTIVE_TARGETS[arch]
+    assert 0.6 * want <= got <= 1.6 * want, (arch, got, want)
+    assert got < cfg.param_count()
+
+
+def test_shape_suite_complete():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_context_policy():
+    runners = {a for a in ARCH_NAMES if get_config(a).run_long_context}
+    assert runners == {"xlstm-125m", "jamba-v0.1-52b"}
+
+
+def test_loghd_head_bundle_count():
+    cfg = get_config("qwen3-1.7b")
+    # ceil(log2 151936) = 18, +2 redundancy
+    assert cfg.loghd_bundles == 20

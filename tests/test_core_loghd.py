@@ -1,0 +1,229 @@
+"""Unit + property tests for the LogHD core (codebook, bundling, profiles,
+quantization, fault injection, memory accounting)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codebook as cb
+from repro.core.bundling import build_bundles, refine_bundles, symbol_targets
+from repro.core.faults import corrupt_model, flip_bits_f32, flip_bits_int
+from repro.core.loghd import (LogHDConfig, fit_loghd, max_bundles_for_budget,
+                              memory_bits, predict_loghd_encoded)
+from repro.core.profiles import (activations, decode_profiles,
+                                 estimate_profiles)
+from repro.core.quantize import QTensor, dequantize, quantize
+
+
+# ------------------------------------------------------------- codebook ---
+
+@settings(max_examples=25, deadline=None)
+@given(c=st.integers(2, 40), k=st.integers(2, 5), extra=st.integers(0, 3))
+def test_codebook_unique_and_feasible(c, k, extra):
+    n = cb.min_bundles(c, k) + extra
+    book = cb.build_codebook(c, n, k, seed=1)
+    assert book.shape == (c, n)
+    assert book.min() >= 0 and book.max() <= k - 1
+    assert cb.verify_unique(book)
+
+
+def test_codebook_infeasible_raises():
+    with pytest.raises(ValueError):
+        cb.build_codebook(26, 3, 2)      # 2^3 < 26
+
+
+@pytest.mark.parametrize("method", ["greedy", "distance", "stratified"])
+def test_codebook_methods_balance(method):
+    c, k = 26, 2
+    n = cb.min_bundles(c, k) + 3
+    book = cb.build_codebook(c, n, k, method=method, seed=0)
+    assert cb.verify_unique(book)
+    loads = np.asarray(cb.bundle_loads(book, k))
+    # minimax-load objective: no bundle should carry > 2x the mean load
+    assert loads.max() <= 2.0 * loads.mean() + 1.0
+
+
+def test_distance_codebook_beats_greedy_min_distance():
+    c, k, n = 26, 2, 10
+    greedy = cb.build_codebook(c, n, k, method="greedy", seed=0)
+    dist = cb.build_codebook(c, n, k, method="distance", seed=0)
+
+    def min_dist(book):
+        d = 1 << 30
+        for i in range(c):
+            for j in range(i + 1, c):
+                d = min(d, int((book[i] != book[j]).sum()))
+        return d
+    assert min_dist(dist) >= min_dist(greedy)
+    assert min_dist(dist) >= 2
+
+
+def test_vocab_scale_codebook():
+    """LM-head scale: stratified path, 150k classes."""
+    book = cb.build_codebook(10_000, 16, 2, method="stratified", seed=0)
+    assert cb.verify_unique(book)
+
+
+# ----------------------------------------------------- bundling/profiles ---
+
+def _toy(c=6, d=512, n_per=30, seed=0):
+    key = jax.random.PRNGKey(seed)
+    dirs = jax.random.normal(key, (c, d))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=1, keepdims=True)
+    y = jnp.repeat(jnp.arange(c), n_per)
+    h = dirs[y] * 2.0 + jax.random.normal(key, (c * n_per, d)) * 0.25
+    h = h / jnp.linalg.norm(h, axis=1, keepdims=True)
+    onehot = jax.nn.one_hot(y, c)
+    protos = (onehot.T @ h) / jnp.maximum(onehot.sum(0)[:, None], 1.0)
+    protos = protos / jnp.linalg.norm(protos, axis=1, keepdims=True)
+    return h, y, protos
+
+
+def test_bundles_shapes_and_norm():
+    h, y, protos = _toy()
+    book = jnp.asarray(cb.build_codebook(6, 4, 2, seed=0))
+    m = build_bundles(protos, book, 2)
+    assert m.shape == (4, protos.shape[1])
+    np.testing.assert_allclose(jnp.linalg.norm(m, axis=1), 1.0, rtol=1e-5)
+
+
+def test_profile_decode_end_to_end():
+    """On cleanly separable data, profile decode must be near-perfect."""
+    h, y, protos = _toy()
+    book = jnp.asarray(cb.build_codebook(6, 5, 2, method="distance", seed=0))
+    m = build_bundles(protos, book, 2)
+    p = estimate_profiles(m, h, y, 6)
+    preds = decode_profiles(p, activations(m, h))
+    assert float(jnp.mean(preds == y)) > 0.95
+
+
+def test_refinement_reduces_target_error():
+    h, y, protos = _toy()
+    book = jnp.asarray(cb.build_codebook(6, 5, 2, seed=0))
+    m0 = build_bundles(protos, book, 2)
+    t = symbol_targets(book, 2)[y]
+    err0 = float(jnp.mean((t - activations(m0, h)) ** 2))
+    m1 = refine_bundles(m0, h, y, book, 2, epochs=10, lr=1e-2, batch_size=16)
+    err1 = float(jnp.mean((t - activations(m1, h)) ** 2))
+    assert err1 < err0
+
+
+def test_decode_metrics_agree_on_easy_data():
+    h, y, protos = _toy()
+    book = jnp.asarray(cb.build_codebook(6, 5, 2, method="distance", seed=0))
+    m = build_bundles(protos, book, 2)
+    p = estimate_profiles(m, h, y, 6)
+    a = activations(m, h)
+    l2 = decode_profiles(p, a, "l2")
+    resid = a - p[y]
+    si = jnp.linalg.inv(resid.T @ resid / len(resid) + 1e-6 * jnp.eye(5))
+    mh = decode_profiles(p, a, "maha", sigma_inv=si)
+    assert float(jnp.mean(l2 == y)) > 0.9
+    assert float(jnp.mean(mh == y)) > 0.9
+
+
+# ----------------------------------------------------------- quantization ---
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 100))
+def test_quant_roundtrip_bounded(bits, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 32))
+    q = quantize(w, bits)
+    back = dequantize(q)
+    assert q.codes.dtype == jnp.int8
+    # error bounded by ~1 scale step for in-range values
+    err = jnp.abs(w - back)
+    assert float(jnp.median(err)) <= float(q.scale) * 1.0 + 1e-6
+
+
+def test_quant_mse_monotone_in_bits():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
+    mses = [float(jnp.mean((w - dequantize(quantize(w, b))) ** 2))
+            for b in (1, 2, 4, 8)]
+    assert mses[0] >= mses[1] >= mses[2] >= mses[3]
+
+
+def test_quant_codes_in_range():
+    w = jax.random.normal(jax.random.PRNGKey(1), (128,)) * 10
+    for b in (1, 2, 4, 8):
+        q = quantize(w, b)
+        lo, hi = (0, 1) if b == 1 else (-(2 ** (b - 1)), 2 ** (b - 1) - 1)
+        assert int(q.codes.min()) >= lo and int(q.codes.max()) <= hi
+
+
+# ---------------------------------------------------------------- faults ---
+
+def test_flip_zero_prob_identity():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    q = quantize(w, 8)
+    fq = flip_bits_int(q, 0.0, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(q.codes, fq.codes)
+    np.testing.assert_array_equal(w, flip_bits_f32(w, 0.0,
+                                                   jax.random.PRNGKey(2)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.sampled_from([0.05, 0.2, 0.5]), bits=st.sampled_from([1, 4, 8]))
+def test_flip_rate_matches_probability(p, bits):
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 64))
+    q = quantize(w, bits)
+    fq = flip_bits_int(q, p, jax.random.PRNGKey(4))
+    mask = (q.codes.astype(jnp.uint8) ^ fq.codes.astype(jnp.uint8)) \
+        & ((1 << bits) - 1)
+    flipped = sum(int(jnp.sum((mask >> b) & 1)) for b in range(bits))
+    total = q.codes.size * bits
+    rate = flipped / total
+    assert abs(rate - p) < 0.05
+
+
+def test_damage_monotone_in_p():
+    """Dequantized corruption grows with p (the core robustness axis)."""
+    w = jax.random.normal(jax.random.PRNGKey(5), (128, 128))
+    q = quantize(w, 8)
+    errs = []
+    for p in (0.01, 0.1, 0.3):
+        fq = flip_bits_int(q, p, jax.random.PRNGKey(6))
+        errs.append(float(jnp.mean(jnp.abs(dequantize(q) - dequantize(fq)))))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_corrupt_model_scopes():
+    model = {"enc": {"proj": jnp.ones((4, 4))},
+             "bundles": quantize(jnp.ones((4, 8)), 8),
+             "profiles": quantize(jnp.ones((6, 4)), 8),
+             "codebook": jnp.zeros((6, 4), jnp.int32)}
+    out_all = corrupt_model(model, 0.5, jax.random.PRNGKey(0), scope="all")
+    out_hv = corrupt_model(model, 0.5, jax.random.PRNGKey(0), scope="hv")
+    # encoder and codebook never corrupted
+    np.testing.assert_array_equal(out_all["enc"]["proj"], model["enc"]["proj"])
+    np.testing.assert_array_equal(out_all["codebook"], model["codebook"])
+    # hv protects profiles, corrupts bundles
+    np.testing.assert_array_equal(out_hv["profiles"].codes,
+                                  model["profiles"].codes)
+    assert not np.array_equal(out_hv["bundles"].codes, model["bundles"].codes)
+    assert not np.array_equal(out_all["profiles"].codes,
+                              model["profiles"].codes)
+
+
+# ------------------------------------------------------ memory accounting ---
+
+def test_memory_scaling_logarithmic():
+    d = 10_000
+    for c in (16, 256, 4096):
+        n = cb.min_bundles(c, 2)
+        log_mem = memory_bits(c, d, n, 32)
+        conv_mem = c * d * 32
+        assert log_mem < conv_mem
+        # O(D log C): within 2x of n*(D+C) words
+        assert log_mem == n * d * 32 + c * n * 32
+    # ratio improves with C
+    r16 = memory_bits(16, d, 4, 32) / (16 * d * 32)
+    r4096 = memory_bits(4096, d, 12, 32) / (4096 * d * 32)
+    assert r4096 < r16
+
+
+def test_budget_helper():
+    n = max_bundles_for_budget(0.4, 26, 10_000, 2)
+    assert n * (10_000 + 26) <= 0.4 * 26 * 10_000

@@ -1,0 +1,51 @@
+"""Mamba block: chunked-parallel forward == step-by-step recurrent decode
+(the strongest correctness check for the fused chunk scan)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.mamba import (MambaConfig, decode_mamba, init_mamba,
+                                init_mamba_state, mamba_block)
+
+
+def test_chunked_forward_matches_recurrent_decode():
+    cfg = MambaConfig(d_model=32, d_state=8, d_conv=4, expand=2, chunk=8)
+    params = init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, t = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, cfg.d_model)) * 0.5
+
+    y_par = mamba_block(params, cfg, x)
+
+    state = init_mamba_state(cfg, b, jnp.float32)
+    outs = []
+    for i in range(t):
+        y_i, state = decode_mamba(params, cfg, x[:, i:i + 1], state)
+        outs.append(y_i[:, 0])
+    y_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunk_size_invariance():
+    """The chunked scan must be exact: results independent of chunk size."""
+    base = MambaConfig(d_model=16, d_state=4, chunk=4)
+    params = init_mamba(jax.random.PRNGKey(2), base, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 16)) * 0.5
+    import dataclasses
+    y4 = mamba_block(params, base, x)
+    y16 = mamba_block(params, dataclasses.replace(base, chunk=16), x)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y16), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_gradients_flow():
+    cfg = MambaConfig(d_model=16, d_state=4, chunk=8)
+    params = init_mamba(jax.random.PRNGKey(4), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 16, 16)) * 0.5
+
+    def loss(p):
+        return jnp.mean(mamba_block(p, cfg, x) ** 2)
+    g = jax.grad(loss)(params)
+    total = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0
