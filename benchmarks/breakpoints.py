@@ -9,6 +9,8 @@ plus the LogHD/SparseHD p* ratio — the quantity behind the paper's
 "sustains target accuracy at 2.5-3.0x higher bit-flip rates" claim (C2).
 
     PYTHONPATH=src python -m benchmarks.breakpoints bench_output.txt
+    PYTHONPATH=src python -m benchmarks.breakpoints --run-quick   # no file:
+        # generate the rows in-process via the typed-estimator fig3 run
 """
 
 from __future__ import annotations
@@ -70,9 +72,21 @@ def ratios(bps):
     return table
 
 
+def fig3_rows(quick: bool = True):
+    """Run the fig3 sweep in-process (typed estimator API) and return its
+    rows in the parsed format — no CSV round-trip needed."""
+    from benchmarks.fig3_bitflip import run
+    return [(ds, float(budget), int(bits), scope, method, float(p),
+             float(acc))
+            for ds, budget, bits, scope, method, p, acc in run(quick=quick)]
+
+
 def main(path: str | None = None):
-    lines = open(path).readlines() if path else sys.stdin.readlines()
-    rows = parse_fig3(lines)
+    if path in ("--run", "--run-quick"):
+        rows = fig3_rows(quick=(path == "--run-quick"))
+    else:
+        lines = open(path).readlines() if path else sys.stdin.readlines()
+        rows = parse_fig3(lines)
     if not rows:
         print("no fig3 rows found", file=sys.stderr)
         return

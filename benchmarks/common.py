@@ -1,4 +1,11 @@
-"""Shared benchmark fixtures: trained models per dataset, timed helpers."""
+"""Shared benchmark fixtures: trained classifiers per dataset, timed helpers.
+
+Classifiers are built through the typed estimator API
+(``repro.api.make_classifier``); each ``*_for_budget`` helper returns a
+fitted ``HDClassifier`` whose ``.model`` is the typed pytree model the
+evaluation harness consumes directly (no per-method predict-function
+plumbing).
+"""
 
 from __future__ import annotations
 
@@ -9,9 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hybrid import HybridConfig, fit_hybrid
-from repro.core.loghd import LogHDConfig, fit_loghd
-from repro.core.sparsehd import SparseHDConfig, fit_sparsehd
+from repro.api import HDClassifier, make_classifier
+from repro.core.codebook import min_bundles
 from repro.data.synth import load_dataset
 from repro.hdc.conventional import class_prototypes
 from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
@@ -36,46 +42,43 @@ def dataset_fixture(name: str, dim: int = D_DEFAULT):
             "protos": protos}
 
 
+def _fit_shared(clf: HDClassifier, fx, **kw) -> HDClassifier:
+    """Fit on the fixture's shared encoder/encodings/prototypes."""
+    return clf.fit(fx["x_tr"], fx["y_tr"], prototypes=fx.get("protos"),
+                   enc=fx["enc"], encoded=fx["h_tr"], **kw)
+
+
 def loghd_for_budget(fx, budget: float, k: int = 2, refine: int = 50,
-                     codebook: str = "distance"):
+                     codebook: str = "distance") -> HDClassifier:
     """n = floor(budget * C) bundles (paper budget accounting: n*D words)."""
     spec = fx["spec"]
-    from repro.core.codebook import min_bundles
     n_min = min_bundles(spec.n_classes, k)
     n = max(n_min, int(budget * spec.n_classes))
-    cfg = LogHDConfig(n_classes=spec.n_classes, k=k,
-                      extra_bundles=n - n_min, refine_epochs=refine,
-                      refine_batch=64, codebook_method=codebook)
-    model = fit_loghd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                      prototypes=fx["protos"], enc=fx["enc"],
-                      encoded=fx["h_tr"])
-    return cfg, model
+    clf = make_classifier("loghd", spec.n_classes, enc_cfg=fx["enc_cfg"],
+                          k=k, extra_bundles=n - n_min, refine_epochs=refine,
+                          refine_batch=64, codebook_method=codebook)
+    return _fit_shared(clf, fx)
 
 
-def sparsehd_for_budget(fx, budget: float, retrain: int = 30):
+def sparsehd_for_budget(fx, budget: float, retrain: int = 30) -> HDClassifier:
     spec = fx["spec"]
-    cfg = SparseHDConfig(n_classes=spec.n_classes, sparsity=1.0 - budget,
-                         retrain_epochs=retrain)
-    model = fit_sparsehd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                         prototypes=fx["protos"], enc=fx["enc"],
-                         encoded=fx["h_tr"])
-    return cfg, model
+    clf = make_classifier("sparsehd", spec.n_classes, enc_cfg=fx["enc_cfg"],
+                          sparsity=1.0 - budget, retrain_epochs=retrain)
+    return _fit_shared(clf, fx)
 
 
-def hybrid_for_budget(fx, budget: float, k: int = 2, refine: int = 50):
+def hybrid_for_budget(fx, budget: float, k: int = 2,
+                      refine: int = 50) -> HDClassifier:
     """n bundles at 2x the budget, then sparsify dims to land on budget."""
     spec = fx["spec"]
-    from repro.core.codebook import min_bundles
     n_min = min_bundles(spec.n_classes, k)
     n = max(n_min, int(2 * budget * spec.n_classes))
-    lcfg = LogHDConfig(n_classes=spec.n_classes, k=k,
-                       extra_bundles=n - n_min, refine_epochs=refine,
-                       refine_batch=64, codebook_method="distance")
     sparsity = 1.0 - (budget * spec.n_classes) / n
-    cfg = HybridConfig(loghd=lcfg, sparsity=float(np.clip(sparsity, 0, 0.95)))
-    model = fit_hybrid(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                       encoded=fx["h_tr"])
-    return cfg, model
+    clf = make_classifier("hybrid", spec.n_classes, enc_cfg=fx["enc_cfg"],
+                          sparsity=float(np.clip(sparsity, 0, 0.95)),
+                          k=k, extra_bundles=n - n_min, refine_epochs=refine,
+                          refine_batch=64, codebook_method="distance")
+    return clf.fit(fx["x_tr"], fx["y_tr"], encoded=fx["h_tr"])
 
 
 def timed(fn, *args, iters: int = 20, warmup: int = 3):

@@ -2,6 +2,12 @@
 model-size budgets, across datasets — SparseHD vs LogHD (k in {2,3}) vs
 Hybrid.
 
+Models are built through the typed estimator API (benchmarks.common); each
+method contributes its typed model and the evaluation harness uses the
+model's own stored-leaf declaration and jit-cached predict path — one
+compiled executable per method per dataset, shared across every
+(scope, p, trial) point below.
+
 Reports BOTH fault scopes (DESIGN.md / EXPERIMENTS.md §Paper-claims):
   all — flips on bundles/prototypes AND activation profiles (paper text)
   hv  — flips on the bulk hypervector memory only (profiles in ECC side
@@ -18,9 +24,6 @@ import numpy as np
 from benchmarks.common import (dataset_fixture, hybrid_for_budget,
                                loghd_for_budget, sparsehd_for_budget)
 from repro.core.evaluate import evaluate_under_flips
-from repro.core.hybrid import predict_hybrid_encoded
-from repro.core.loghd import predict_loghd_encoded
-from repro.core.sparsehd import predict_sparsehd_encoded
 
 P_GRID = [0.0, 0.01, 0.02, 0.05, 0.1, 0.15, 0.2, 0.3, 0.4]
 BUDGETS = [0.2, 0.4]
@@ -40,21 +43,17 @@ def run(bits: int = 4, datasets=None, budgets=None, trials: int = 2,
             methods = []
             for k in (2, 3):
                 try:
-                    cfg, m = loghd_for_budget(fx, budget, k=k)
-                    methods.append((f"loghd_k{k}", m, "loghd",
-                                    predict_loghd_encoded))
+                    methods.append((f"loghd_k{k}",
+                                    loghd_for_budget(fx, budget, k=k).model))
                 except ValueError:
                     pass  # infeasible: budget below ceil(log_k C)/C floor
-            _, sm = sparsehd_for_budget(fx, budget)
-            methods.append(("sparsehd", sm, "sparsehd",
-                            predict_sparsehd_encoded))
-            _, hm = hybrid_for_budget(fx, budget)
-            methods.append(("hybrid", hm, "hybrid", predict_hybrid_encoded))
+            methods.append(("sparsehd", sparsehd_for_budget(fx, budget).model))
+            methods.append(("hybrid", hybrid_for_budget(fx, budget).model))
             for scope in ("all", "hv"):
-                for name, model, kind, pred in methods:
+                for name, model in methods:
                     for p in p_grid:
                         acc = evaluate_under_flips(
-                            model, kind, bits, p, pred, fx["h_te"],
+                            model, None, bits, p, None, fx["h_te"],
                             fx["y_te"], key, trials, scope)
                         rows.append((ds, budget, bits, scope, name, p, acc))
     return rows

@@ -11,8 +11,6 @@ import jax
 from benchmarks.common import (dataset_fixture, loghd_for_budget,
                                sparsehd_for_budget)
 from repro.core.evaluate import evaluate_under_flips
-from repro.core.loghd import predict_loghd_encoded
-from repro.core.sparsehd import predict_sparsehd_encoded
 
 DIMS = [2000, 10_000]
 BITS = [1, 2, 4, 8]
@@ -26,15 +24,14 @@ def run(dataset: str = "ucihar", budget: float = 0.4, quick: bool = False):
     bits_grid = [1, 8] if quick else BITS
     for dim in dims:
         fx = dataset_fixture(dataset, dim=dim)
-        _, lm = loghd_for_budget(fx, budget)
-        _, sm = sparsehd_for_budget(fx, budget)
+        lm = loghd_for_budget(fx, budget).model
+        sm = sparsehd_for_budget(fx, budget).model
         for bits in bits_grid:
             for p in P_GRID:
-                la = evaluate_under_flips(lm, "loghd", bits, p,
-                                          predict_loghd_encoded, fx["h_te"],
-                                          fx["y_te"], key, 2, "all")
-                sa = evaluate_under_flips(sm, "sparsehd", bits, p,
-                                          predict_sparsehd_encoded,
+                la = evaluate_under_flips(lm, None, bits, p, None,
+                                          fx["h_te"], fx["y_te"], key, 2,
+                                          "all")
+                sa = evaluate_under_flips(sm, None, bits, p, None,
                                           fx["h_te"], fx["y_te"], key, 2,
                                           "all")
                 rows.append((dataset, dim, bits, "loghd", p, la))

@@ -12,9 +12,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import dataset_fixture
+from repro.api import make_classifier
 from repro.core.codebook import min_bundles
 from repro.core.evaluate import evaluate_under_flips
-from repro.core.loghd import LogHDConfig, fit_loghd, predict_loghd_encoded
 
 KS = [2, 3, 4, 8]
 P_GRID = [0.0, 0.3]
@@ -31,15 +31,16 @@ def run(datasets=("page", "ucihar"), bits: int = 1, quick: bool = False):
             n0 = min_bundles(c, k)
             n_grid = [n0, n0 + 1] if quick else [n0, n0 + 1, n0 + 2, n0 + 4]
             for n in n_grid:
-                cfg = LogHDConfig(n_classes=c, k=k, extra_bundles=n - n0,
-                                  refine_epochs=30, refine_batch=64,
-                                  codebook_method="distance")
-                model = fit_loghd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                                  prototypes=fx["protos"], enc=fx["enc"],
-                                  encoded=fx["h_tr"])
+                clf = make_classifier(
+                    "loghd", c, enc_cfg=fx["enc_cfg"], k=k,
+                    extra_bundles=n - n0, refine_epochs=30, refine_batch=64,
+                    codebook_method="distance")
+                clf = clf.fit(fx["x_tr"], fx["y_tr"],
+                              prototypes=fx["protos"], enc=fx["enc"],
+                              encoded=fx["h_tr"])
                 for p in P_GRID:
                     acc = evaluate_under_flips(
-                        model, "loghd", bits, p, predict_loghd_encoded,
+                        clf.model, None, bits, p, None,
                         fx["h_te"], fx["y_te"], key, 2, "all")
                     rows.append((ds, k, n, round(n / c, 3), bits, p, acc))
     return rows

@@ -11,10 +11,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import dataset_fixture
+from repro.api import make_classifier
 from repro.core.codebook import min_bundles
 from repro.core.evaluate import evaluate_under_flips
-from repro.core.hybrid import HybridConfig, fit_hybrid, predict_hybrid_encoded
-from repro.core.loghd import LogHDConfig, fit_loghd
 
 RETAINS = [0.25, 0.5, 0.75, 1.0]
 P_GRID = [0.0, 0.1, 0.3]
@@ -29,19 +28,21 @@ def run(dataset: str = "isolet", bits: int = 4, quick: bool = False):
     n_grid = [n0, n0 + 5] if quick else [n0, n0 + 2, n0 + 5, n0 + 10]
     retains = [0.5, 1.0] if quick else RETAINS
     for n in n_grid:
-        lcfg = LogHDConfig(n_classes=c, k=2, extra_bundles=n - n0,
-                           refine_epochs=30, refine_batch=64,
-                           codebook_method="distance")
-        base = fit_loghd(lcfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                         prototypes=fx["protos"], enc=fx["enc"],
-                         encoded=fx["h_tr"])
+        base_clf = make_classifier(
+            "loghd", c, enc_cfg=fx["enc_cfg"], k=2, extra_bundles=n - n0,
+            refine_epochs=30, refine_batch=64, codebook_method="distance")
+        base_clf = base_clf.fit(fx["x_tr"], fx["y_tr"],
+                                prototypes=fx["protos"], enc=fx["enc"],
+                                encoded=fx["h_tr"])
         for retain in retains:
-            cfg = HybridConfig(loghd=lcfg, sparsity=1.0 - retain)
-            model = fit_hybrid(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                               base=base, encoded=fx["h_tr"])
+            clf = make_classifier(
+                "hybrid", c, enc_cfg=fx["enc_cfg"],
+                loghd=base_clf.cfg, sparsity=1.0 - retain)
+            clf = clf.fit(fx["x_tr"], fx["y_tr"], base=base_clf.model,
+                          encoded=fx["h_tr"])
             for p in P_GRID:
                 acc = evaluate_under_flips(
-                    model, "hybrid", bits, p, predict_hybrid_encoded,
+                    clf.model, None, bits, p, None,
                     fx["h_te"], fx["y_te"], key, 2, "all")
                 rows.append((dataset, n, retain, bits, p, acc))
     return rows

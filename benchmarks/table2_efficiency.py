@@ -83,21 +83,21 @@ def run():
 def measured_cpu_trend():
     """Wall-clock of our JAX implementations (this container's CPU) —
     sanity check that the op-count ordering holds end-to-end."""
-    import jax
-    import jax.numpy as jnp
     from benchmarks.common import (dataset_fixture, loghd_for_budget,
                                    sparsehd_for_budget, timed)
-    from repro.core.loghd import predict_loghd_encoded
-    from repro.core.sparsehd import predict_sparsehd_encoded
-    from repro.hdc.conventional import predict_from_encoded
+    from repro.api.dispatch import predict_fn
+    from repro.api.models import ConventionalModel
 
     fx = dataset_fixture("isolet")
-    _, lm = loghd_for_budget(fx, 0.25)
-    _, sm = sparsehd_for_budget(fx, 0.4)
+    cm = ConventionalModel(enc=fx["enc"], protos=fx["protos"])
+    lm = loghd_for_budget(fx, 0.25).model
+    sm = sparsehd_for_budget(fx, 0.4).model
     h = fx["h_te"][:256]
-    conv = timed(jax.jit(lambda hh: predict_from_encoded(fx["protos"], hh)), h)
-    lg = timed(jax.jit(lambda hh: predict_loghd_encoded(lm, hh)), h)
-    sp = timed(jax.jit(lambda hh: predict_sparsehd_encoded(sm, hh)), h)
+    # all three timed through the same jit-cached dispatch surface (model
+    # passed as a runtime argument), so the comparison isolates op count
+    conv = timed(lambda hh: predict_fn(cm)(cm, hh), h)
+    lg = timed(lambda hh: predict_fn(lm)(lm, hh), h)
+    sp = timed(lambda hh: predict_fn(sm)(sm, hh), h)
     return [("cpu_wallclock_conventional_us", "cpu", "latency", round(conv, 1), ""),
             ("cpu_wallclock_sparsehd_us", "cpu", "latency", round(sp, 1), ""),
             ("cpu_wallclock_loghd_us", "cpu", "latency", round(lg, 1), "")]

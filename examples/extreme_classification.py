@@ -16,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import make_classifier
 from repro.core.codebook import min_bundles
-from repro.core.loghd import LogHDConfig, fit_loghd, predict_loghd_encoded
-from repro.hdc.conventional import class_prototypes, predict_from_encoded
+from repro.hdc.conventional import class_prototypes
 from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
 
 
@@ -44,20 +44,24 @@ def main():
     enc, h_tr = fit_encoder(enc_cfg, jnp.asarray(x_tr))
     h_te = encode_batched(enc, jnp.asarray(x_te), "cos")
     protos = class_prototypes(h_tr, jnp.asarray(y_tr), c)
+
+    conv = make_classifier("conventional", c, enc_cfg=enc_cfg)
+    conv = conv.fit(jnp.asarray(x_tr), jnp.asarray(y_tr),
+                    prototypes=protos, enc=enc, encoded=h_tr)
     t0 = time.time()
-    acc_conv = float(jnp.mean(predict_from_encoded(protos, h_te) == y_te))
+    acc_conv = conv.accuracy(h_te, y_te)
     t_conv = time.time() - t0
 
     n_min = min_bundles(c, 2)
-    cfg = LogHDConfig(n_classes=c, k=2, extra_bundles=2, refine_epochs=0,
-                      codebook_method="stratified")
-    model = fit_loghd(cfg, enc_cfg, jnp.asarray(x_tr), jnp.asarray(y_tr),
-                      prototypes=protos, enc=enc, encoded=h_tr)
+    log = make_classifier("loghd", c, enc_cfg=enc_cfg, k=2, extra_bundles=2,
+                          refine_epochs=0, codebook_method="stratified")
+    log = log.fit(jnp.asarray(x_tr), jnp.asarray(y_tr),
+                  prototypes=protos, enc=enc, encoded=h_tr)
     t0 = time.time()
-    acc = float(jnp.mean(predict_loghd_encoded(model, h_te) == y_te))
+    acc = log.accuracy(h_te, y_te)
     t_log = time.time() - t0
 
-    n = cfg.n_bundles
+    n = log.model.n_bundles
     conv_words = c * d
     log_words = n * d + c * n
     print(f"conventional: {conv_words/1e6:.1f}M words, acc={acc_conv:.3f}, "

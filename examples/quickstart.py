@@ -1,22 +1,27 @@
-"""Quickstart: train LogHD on the ISOLET surrogate, compare against
-conventional HDC and SparseHD, and measure bit-flip robustness.
+"""Quickstart: the typed estimator API end to end — train LogHD on the
+ISOLET surrogate, compare against conventional HDC and SparseHD, and measure
+bit-flip robustness.
+
+Every method is constructed the same way:
+
+    clf = make_classifier("loghd", n_classes=C, in_features=F, ...)
+    clf = clf.fit(x_train, y_train)
+
+and the robustness protocol is the uniform pipeline
+``quantized(bits) -> corrupted(p, key) -> predict`` that
+``evaluate_under_flips`` drives with one jit-cached predict executable per
+method.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import sys
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api import make_classifier
 from repro.core.evaluate import evaluate_under_flips
-from repro.core.loghd import (LogHDConfig, fit_loghd, memory_bits,
-                              predict_loghd_encoded)
-from repro.core.sparsehd import (SparseHDConfig, fit_sparsehd,
-                                 predict_sparsehd_encoded)
 from repro.data.synth import load_dataset
-from repro.hdc.conventional import class_prototypes, predict_from_encoded
+from repro.hdc.conventional import class_prototypes
 from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
 
 
@@ -28,41 +33,41 @@ def main():
     print(f"dataset: {spec.name}  F={spec.n_features} C={c} "
           f"N={len(x_tr)}/{len(x_te)}  D={d}")
 
+    # One shared encoder + prototype set for every method (paper Sec. IV-A).
     enc_cfg = EncoderConfig(spec.n_features, d, "cos")
     enc, h_tr = fit_encoder(enc_cfg, jnp.asarray(x_tr))
     h_te = encode_batched(enc, jnp.asarray(x_te), "cos")
     protos = class_prototypes(h_tr, jnp.asarray(y_tr), c)
+    shared = dict(prototypes=protos, enc=enc, encoded=h_tr)
+    x_tr, y_tr = jnp.asarray(x_tr), jnp.asarray(y_tr)
 
-    acc_conv = float(jnp.mean(predict_from_encoded(protos, h_te) == y_te))
+    conv = make_classifier("conventional", c, enc_cfg=enc_cfg)
+    conv = conv.fit(x_tr, y_tr, **shared)
     print(f"\nconventional HDC ({c}x{d} = {c*d/1e3:.0f}k words): "
-          f"acc={acc_conv:.3f}")
+          f"acc={conv.accuracy(h_te, y_te):.3f}")
 
-    cfg = LogHDConfig(n_classes=c, k=2, extra_bundles=5, refine_epochs=50,
-                      codebook_method="distance")
-    model = fit_loghd(cfg, enc_cfg, jnp.asarray(x_tr), jnp.asarray(y_tr),
-                      prototypes=protos, enc=enc, encoded=h_tr)
-    acc = float(jnp.mean(predict_loghd_encoded(model, h_te) == y_te))
-    n = cfg.n_bundles
-    mem = memory_bits(c, d, n, 32) / (c * d * 32)
+    log = make_classifier("loghd", c, enc_cfg=enc_cfg, k=2, extra_bundles=5,
+                          refine_epochs=50, codebook_method="distance")
+    log = log.fit(x_tr, y_tr, **shared)
+    n = log.model.n_bundles
+    mem = log.model_bits(32) / conv.model_bits(32)
     print(f"LogHD (k=2, n={n}: {n*d/1e3:.0f}k words, {mem:.1%} of baseline):"
-          f" acc={acc:.3f}")
+          f" acc={log.accuracy(h_te, y_te):.3f}")
 
-    scfg = SparseHDConfig(n_classes=c, sparsity=1 - n / c, retrain_epochs=30)
-    sm = fit_sparsehd(scfg, enc_cfg, jnp.asarray(x_tr), jnp.asarray(y_tr),
-                      prototypes=protos, enc=enc, encoded=h_tr)
-    sacc = float(jnp.mean(predict_sparsehd_encoded(sm, h_te) == y_te))
-    print(f"SparseHD (S={scfg.sparsity:.2f}, matched memory): acc={sacc:.3f}")
+    sp = make_classifier("sparsehd", c, enc_cfg=enc_cfg,
+                         sparsity=1 - n / c, retrain_epochs=30)
+    sp = sp.fit(x_tr, y_tr, **shared)
+    print(f"SparseHD (S={sp.cfg.sparsity:.2f}, matched memory): "
+          f"acc={sp.accuracy(h_te, y_te):.3f}")
 
     print("\nbit-flip robustness (1-bit models, bulk-memory scope):")
     key = jax.random.PRNGKey(0)
     print("  p     LogHD  SparseHD")
     for p in [0.0, 0.1, 0.2, 0.3, 0.4]:
-        la = evaluate_under_flips(model, "loghd", 1, p,
-                                  predict_loghd_encoded, h_te, y_te, key,
-                                  2, "hv")
-        sa = evaluate_under_flips(sm, "sparsehd", 1, p,
-                                  predict_sparsehd_encoded, h_te, y_te, key,
-                                  2, "hv")
+        la = evaluate_under_flips(log.model, None, 1, p, None,
+                                  h_te, y_te, key, 2, "hv")
+        sa = evaluate_under_flips(sp.model, None, 1, p, None,
+                                  h_te, y_te, key, 2, "hv")
         print(f"  {p:.2f}  {la:.3f}  {sa:.3f}")
 
 

@@ -2,6 +2,10 @@
 Logarithmic Class-Axis Reduction, built as a production-grade JAX framework.
 
 Layout:
+  api/       — the unified typed-estimator surface: pytree model classes,
+               the make_classifier method registry, jit-cached predict
+               dispatch (Pallas kernels or reference paths), and typed
+               model checkpointing.
   core/      — the paper's contribution: codebook, bundling, profiles,
                refinement, LogHD / SparseHD / Hybrid classifiers, quantization,
                bit-flip fault injection, and the LogHD LM head.

@@ -1,0 +1,64 @@
+"""repro.api — the unified typed-estimator surface for every classifier
+family in the LogHD reproduction.
+
+Module map
+----------
+  models.py        Typed pytree model classes (registered JAX pytree nodes):
+                     ConventionalModel   one prototype per class  (C, D)
+                     SparseHDModel       pruned prototypes + keep mask
+                     LogHDModel          n bundles + C activation profiles
+                     HybridModel         sparsified bundles + profiles
+                   Each declares its own ``stored_leaves`` (budget-counted,
+                   flip-injected state), ``model_bits(bits)`` accounting and
+                   ``predict_encoded``, and supports the robustness pipeline
+                   ``model.quantized(bits).corrupted(p, key).materialized()``
+                   bit-for-bit equal to the legacy dict path.
+  registry.py      String-keyed method registry + the uniform estimator:
+                     make_classifier("loghd", n_classes=26, in_features=617)
+                        .fit(x, y).predict(x_test)
+                   ``register_method(MethodSpec(...))`` plugs a new
+                   compression scheme into every benchmark and evaluation
+                   path with no call-site changes.
+  dispatch.py      One jit-compiled ``(model, h) -> labels`` predict surface
+                   per family, cached across flip trials and sweep points.
+                   Dispatches to the Pallas kernels (bundle_sim,
+                   profile_decode, loghd_head) on compiled TPU backends and
+                   to the pure-jnp reference paths otherwise; also hosts
+                   ``loghd_head_scores``, the LM/serving classifier-head
+                   entry point.
+  checkpointing.py ``save_model``/``load_model``: atomic typed-model
+                   checkpoints that round-trip class, static aux fields and
+                   QTensor bit widths without a caller-supplied skeleton.
+
+Quick start
+-----------
+    from repro.api import make_classifier
+
+    clf = make_classifier("loghd", n_classes=26, in_features=617,
+                          k=2, extra_bundles=5, refine_epochs=50)
+    clf = clf.fit(x_train, y_train)
+    acc = clf.accuracy(h_test, y_test)          # jit-cached predict
+    noisy = clf.quantized(4).corrupted(0.1, jax.random.PRNGKey(0))
+
+The legacy ``fit_*``/``predict_*_encoded`` dict functions in ``core/`` and
+``hdc/`` remain as thin deprecated backends; new code should construct
+models through this package (see ROADMAP "Open items" for the dict-API
+removal plan).
+"""
+
+from repro.api.checkpointing import load_model, model_spec, save_model
+from repro.api.dispatch import (kernels_qualify, loghd_head_scores,
+                                predict_encoded, predict_fn)
+from repro.api.models import (MODEL_CLASSES, ConventionalModel, HDModel,
+                              HybridModel, LogHDModel, SparseHDModel)
+from repro.api.registry import (HDClassifier, MethodSpec, available_methods,
+                                get_method, make_classifier, register_method)
+
+__all__ = [
+    "HDModel", "ConventionalModel", "SparseHDModel", "LogHDModel",
+    "HybridModel", "MODEL_CLASSES",
+    "MethodSpec", "register_method", "get_method", "available_methods",
+    "make_classifier", "HDClassifier",
+    "predict_fn", "predict_encoded", "kernels_qualify", "loghd_head_scores",
+    "save_model", "load_model", "model_spec",
+]

@@ -1,0 +1,112 @@
+"""Checkpoint integration for typed models.
+
+``save_model`` writes a typed model through the repo's atomic checkpoint
+layer (``checkpoint/ckpt.py``) together with a JSON spec of its structure:
+model class, static aux fields, and per-field leaf metadata (array
+shape/dtype, QTensor shape/bits, encoder dict entries).  ``load_model``
+rebuilds the exact typed pytree from the spec alone — callers do not supply
+a target skeleton, and quantized (QTensor-leaved) models round-trip with
+their bit widths intact.
+
+The spec rides inside the checkpoint tree as a scalar JSON leaf, so the
+save stays a single atomic COMMIT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.models import MODEL_CLASSES, HDModel
+from repro.checkpoint.ckpt import (latest_step, read_scalar_leaves,
+                                   restore_checkpoint, save_checkpoint)
+from repro.core.quantize import QTensor
+
+__all__ = ["save_model", "load_model", "model_spec"]
+
+
+def _leaf_spec(v) -> Optional[dict]:
+    if v is None:
+        return None
+    if isinstance(v, QTensor):
+        return {"kind": "qtensor", "shape": list(v.codes.shape),
+                "bits": int(v.bits)}
+    if isinstance(v, dict):
+        return {"kind": "dict",
+                "entries": {k: _leaf_spec(x) for k, x in v.items()}}
+    arr = jnp.asarray(v)
+    return {"kind": "array", "shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def _leaf_skeleton(spec: Optional[dict]):
+    if spec is None:
+        return None
+    if spec["kind"] == "qtensor":
+        return QTensor(jax.ShapeDtypeStruct(tuple(spec["shape"]), jnp.int8),
+                       jax.ShapeDtypeStruct((), jnp.float32), spec["bits"])
+    if spec["kind"] == "dict":
+        return {k: _leaf_skeleton(s) for k, s in spec["entries"].items()}
+    return jax.ShapeDtypeStruct(tuple(spec["shape"]),
+                                jnp.dtype(spec["dtype"]))
+
+
+def model_spec(model: HDModel) -> dict:
+    """JSON-serializable structural description of a typed model."""
+    fields = {}
+    for f in dataclasses.fields(model):
+        if f.name in model.aux_fields:
+            continue
+        fields[f.name] = _leaf_spec(getattr(model, f.name))
+    aux = {n: getattr(model, n) for n in model.aux_fields}
+    return {"format": 1, "method": model.method,
+            "class": type(model).__name__, "aux": aux, "fields": fields}
+
+
+def save_model(ckpt_dir: str, step: int, model: HDModel) -> str:
+    """Atomically save a typed model (f32 or quantized).  Returns the
+    committed directory path."""
+    tree = {"model": model, "spec": json.dumps(model_spec(model))}
+    return save_checkpoint(ckpt_dir, step, tree)
+
+
+def _read_spec(ckpt_dir: str, step: int) -> dict:
+    # The spec is the tree's only string scalar; under jax's sorted-dict-key
+    # flattening ("model" < "spec") it is also the last one, so take the
+    # last parseable candidate to be robust even if a model ever grows a
+    # string leaf of its own.
+    spec = None
+    for value in read_scalar_leaves(ckpt_dir, step):
+        if not isinstance(value, str):
+            continue
+        try:
+            cand = json.loads(value)
+        except ValueError:
+            continue
+        if isinstance(cand, dict) and cand.get("format") == 1:
+            spec = cand
+    if spec is None:
+        raise ValueError(f"no typed-model spec found in {ckpt_dir} step "
+                         f"{step}; was this checkpoint written by "
+                         "save_model?")
+    return spec
+
+
+def load_model(ckpt_dir: str, step: Optional[int] = None) -> HDModel:
+    """Restore a typed model saved with ``save_model``.  ``step=None`` loads
+    the newest committed step."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    spec = _read_spec(ckpt_dir, step)
+    cls = MODEL_CLASSES[spec["method"]]
+    skeleton = cls.from_dict(
+        {name: _leaf_skeleton(s) for name, s in spec["fields"].items()},
+        **spec["aux"])
+    target = {"model": skeleton, "spec": ""}
+    restored = restore_checkpoint(ckpt_dir, step, target)
+    return restored["model"]

@@ -1,0 +1,111 @@
+"""One jit-compiled predict surface for every classifier family.
+
+``predict_fn(model)`` returns a cached, jit-compiled ``(model, h) -> labels``
+callable.  The compiled graph dispatches to the Pallas kernels
+(``bundle_sim``, ``profile_decode``, ``loghd_head``) when the configuration
+qualifies — compiled TPU backend and the l2 decode metric the kernels
+implement — and to the pure-jnp reference paths otherwise (CPU/interpret,
+cos/maha metrics).  Both paths compute the same math; the kernel path is the
+fused ASIC-shaped form.
+
+The cache is keyed on (model class, metric, kernel choice): one trace per
+family per shape set, shared across flip trials, p-grid points and benchmark
+sweeps instead of re-tracing per call.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.models import (ConventionalModel, HDModel, HybridModel,
+                              LogHDModel, SparseHDModel)
+from repro.kernels import common as kcommon
+from repro.kernels.bundle_sim.ops import bundle_similarity
+from repro.kernels.loghd_head.ops import loghd_head_logits
+from repro.kernels.profile_decode.ops import profile_decode_scores
+
+__all__ = ["kernels_qualify", "predict_fn", "predict_encoded",
+           "loghd_head_scores", "clear_cache"]
+
+
+def _l2n(v, axis=-1, eps=1e-12):
+    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
+
+
+def kernels_qualify(metric: str = "l2") -> bool:
+    """Pallas path: compiled TPU backend and the l2 metric the kernels fuse.
+
+    On CPU (this container) the kernels run in interpret mode — orders of
+    magnitude slower than XLA — so the reference path is the fast path."""
+    return (not kcommon.INTERPRET) and metric == "l2"
+
+
+def _predict_kernel(model: HDModel, h: jax.Array) -> jax.Array:
+    """Kernel-dispatched l2 predict (argmax over fused Pallas scores)."""
+    if isinstance(model, ConventionalModel):
+        return jnp.argmax(bundle_similarity(h, _l2n(model.protos)), axis=-1)
+    if isinstance(model, SparseHDModel):
+        h_s = _l2n(h[:, model.keep])
+        return jnp.argmax(bundle_similarity(h_s, _l2n(model.protos)), axis=-1)
+    if isinstance(model, LogHDModel):
+        acts = bundle_similarity(h, _l2n(model.bundles))
+        return jnp.argmax(profile_decode_scores(acts, model.profiles), axis=-1)
+    if isinstance(model, HybridModel):
+        h_s = _l2n(h[:, model.keep])
+        acts = bundle_similarity(h_s, _l2n(model.bundles))
+        return jnp.argmax(profile_decode_scores(acts, model.profiles), axis=-1)
+    raise TypeError(f"no kernel dispatch for {type(model).__name__}")
+
+
+@functools.lru_cache(maxsize=None)
+def _predict_jit(cls: type, metric: str, use_kernels: bool) -> Callable:
+    def run(model: HDModel, h: jax.Array) -> jax.Array:
+        if use_kernels:
+            return _predict_kernel(model, h)
+        return model.predict_encoded(h)
+    return jax.jit(run)
+
+
+def predict_fn(model: HDModel,
+               use_kernels: Optional[bool] = None) -> Callable:
+    """Cached jit-compiled ``(model, h) -> labels`` for `model`'s family."""
+    metric = getattr(model, "metric", "l2")
+    if use_kernels is None:
+        use_kernels = kernels_qualify(metric)
+    return _predict_jit(type(model), metric, bool(use_kernels))
+
+
+def predict_encoded(model: HDModel, h: jax.Array,
+                    use_kernels: Optional[bool] = None) -> jax.Array:
+    """Batched predict on pre-encoded queries through the cached surface."""
+    return predict_fn(model, use_kernels)(model, h)
+
+
+def loghd_head_scores(x: jax.Array, bundles: jax.Array, profiles: jax.Array,
+                      use_kernel: Optional[bool] = None) -> jax.Array:
+    """LogHD LM-head logits -||x M^T - P_v||^2: (..., D) -> (..., V) f32.
+
+    The serving/LM classifier-head path: dispatches to the fused
+    ``loghd_head`` Pallas kernel on compiled TPU backends (unsharded call
+    sites only — the caller gates on its mesh context) and to the jnp
+    expansion otherwise."""
+    if use_kernel is None:
+        use_kernel = not kcommon.INTERPRET
+    p = profiles.astype(jnp.float32)
+    if use_kernel:
+        lead = x.shape[:-1]
+        h2 = x.reshape((-1, x.shape[-1]))
+        out = loghd_head_logits(h2, bundles, p)
+        return out.reshape(lead + (p.shape[0],))
+    a = (x @ bundles.T).astype(jnp.float32)                    # (..., n)
+    return (2.0 * a @ p.T - jnp.sum(p * p, axis=-1)
+            - jnp.sum(a * a, axis=-1, keepdims=True))
+
+
+def clear_cache() -> None:
+    """Drop all cached compiled predict callables (tests / notebooks)."""
+    _predict_jit.cache_clear()

@@ -1,0 +1,268 @@
+"""Typed pytree model classes for the four classifier families.
+
+Each class replaces the raw ``{"enc": ..., "protos": ...}``-style dicts the
+fit_*/predict_* functions historically returned.  A model
+
+  * is a registered JAX pytree (jit/vmap/checkpoint transparent) whose
+    children are its array fields and whose aux data is static config
+    (e.g. the decode metric), so jit specializes on it;
+  * declares its own ``stored_leaves`` — the leaves that count against the
+    memory budget and receive bit flips — so the string-keyed
+    ``STORED_LEAVES`` table in ``core/evaluate.py`` is no longer needed;
+  * knows its own ``model_bits(bits)`` accounting and ``predict_encoded``;
+  * supports the uniform robustness pipeline
+    ``model.quantized(bits).corrupted(p, key).materialized()``.
+
+``to_dict``/``from_dict`` round-trip to the legacy dict layout.  The
+quantize/corrupt methods are implemented *on top of that layout* through the
+same ``core.quantize``/``core.faults`` functions the dict path uses, so the
+typed pipeline is bit-for-bit identical to the historical
+``evaluate.quantize_stored`` + ``faults.corrupt_model`` path (the per-leaf
+PRNG key assignment depends on dict-key order, which to_dict preserves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.faults import corrupt_model
+from repro.core.quantize import QTensor, dequantize_tree, quantize
+
+__all__ = [
+    "HDModel",
+    "ConventionalModel",
+    "SparseHDModel",
+    "LogHDModel",
+    "HybridModel",
+    "MODEL_CLASSES",
+]
+
+
+def _shape(leaf) -> tuple:
+    """Shape of an array or QTensor leaf (QTensor stores codes)."""
+    return tuple(leaf.codes.shape if isinstance(leaf, QTensor) else leaf.shape)
+
+
+class HDModel:
+    """Shared behaviour for the typed classifier models.
+
+    Subclasses are dataclasses whose fields (in declaration order) are the
+    pytree children; ``aux_fields`` names fields carried as static aux data
+    instead (part of the treedef, never traced).
+    """
+
+    method: ClassVar[str]
+    stored_leaves: ClassVar[tuple]
+    aux_fields: ClassVar[tuple] = ()
+
+    # ------------------------------------------------------------- pytree --
+    def tree_flatten(self):
+        fields = [f.name for f in dataclasses.fields(self)]
+        children = tuple(getattr(self, n) for n in fields
+                         if n not in self.aux_fields)
+        aux = tuple(getattr(self, n) for n in self.aux_fields)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fields = [f.name for f in dataclasses.fields(cls)]
+        kw = dict(zip((n for n in fields if n not in cls.aux_fields),
+                      children))
+        kw.update(zip(cls.aux_fields, aux))
+        return cls(**kw)
+
+    # ------------------------------------------------------- dict interop --
+    def to_dict(self) -> dict:
+        """Legacy dict layout (static fields excluded, None fields dropped)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name in self.aux_fields:
+                continue
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict, **aux) -> "HDModel":
+        kw = {f.name: d.get(f.name) for f in dataclasses.fields(cls)
+              if f.name not in cls.aux_fields}
+        kw.update(aux)
+        return cls(**kw)
+
+    def replace(self, **updates) -> "HDModel":
+        return dataclasses.replace(self, **updates)
+
+    # ------------------------------------------- robustness pipeline ------
+    def quantized(self, bits: int) -> "HDModel":
+        """Post-training quantize the stored leaves to `bits`-bit codes."""
+        updates = {name: quantize(getattr(self, name), bits)
+                   for name in self.stored_leaves}
+        return self.replace(**updates)
+
+    def corrupted(self, p: float, key: jax.Array,
+                  scope: str = "all") -> "HDModel":
+        """Flip each stored bit independently w.p. `p` (paper Sec. IV-A)."""
+        d = corrupt_model(self.to_dict(), p, key, scope=scope)
+        aux = {n: getattr(self, n) for n in self.aux_fields}
+        return type(self).from_dict(d, **aux)
+
+    def materialized(self) -> "HDModel":
+        """Dequantize any QTensor leaves back to f32 for inference."""
+        updates = {}
+        for name in self.stored_leaves:
+            v = getattr(self, name)
+            if isinstance(v, QTensor):
+                updates[name] = dequantize_tree(v)
+        return self.replace(**updates) if updates else self
+
+    # --------------------------------------------------------- interface --
+    def predict_encoded(self, h: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def predict(self, x: jax.Array) -> jax.Array:
+        from repro.hdc.encoders import encode
+        return self.predict_encoded(encode(self.enc, x, self.encoder_kind))
+
+    def model_bits(self, bits: int) -> int:
+        raise NotImplementedError
+
+    @property
+    def n_classes(self) -> int:
+        raise NotImplementedError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class ConventionalModel(HDModel):
+    """One prototype per class (the paper's uncompressed baseline)."""
+
+    enc: dict
+    protos: Any                       # (C, D) f32 or QTensor
+    encoder_kind: str = "cos"         # static: which phi the enc dict is for
+
+    method: ClassVar[str] = "conventional"
+    stored_leaves: ClassVar[tuple] = ("protos",)
+    aux_fields: ClassVar[tuple] = ("encoder_kind",)
+
+    def predict_encoded(self, h: jax.Array) -> jax.Array:
+        from repro.hdc.conventional import predict_from_encoded
+        return predict_from_encoded(self.protos, h)
+
+    def model_bits(self, bits: int) -> int:
+        c, d = _shape(self.protos)
+        return c * d * bits
+
+    @property
+    def n_classes(self) -> int:
+        return _shape(self.protos)[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class SparseHDModel(HDModel):
+    """Feature-axis baseline: pruned prototypes + shared keep-mask."""
+
+    enc: dict
+    protos: Any                       # (C, D') f32 or QTensor
+    keep: Any                         # (D',) int32 retained dim indices
+    encoder_kind: str = "cos"
+
+    method: ClassVar[str] = "sparsehd"
+    stored_leaves: ClassVar[tuple] = ("protos",)
+    aux_fields: ClassVar[tuple] = ("encoder_kind",)
+
+    def predict_encoded(self, h: jax.Array) -> jax.Array:
+        from repro.core.sparsehd import predict_sparsehd_encoded
+        return predict_sparsehd_encoded(self.to_dict(), h)
+
+    def model_bits(self, bits: int) -> int:
+        # same accounting as core.sparsehd.sparsehd_memory_bits, inlined so
+        # it also covers QTensor-leaved (quantized) models
+        c, d_kept = _shape(self.protos)
+        d_full = self.enc["proj"].shape[1]
+        return c * d_kept * bits + d_full
+
+    @property
+    def n_classes(self) -> int:
+        return _shape(self.protos)[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class LogHDModel(HDModel):
+    """The paper's class-axis compressor: n bundles + C activation profiles."""
+
+    enc: dict
+    bundles: Any                      # (n, D) f32 or QTensor
+    profiles: Any                     # (C, n) f32 or QTensor
+    codebook: Any                     # (C, n) int32 — structural, protected
+    sigma_inv: Any = None             # (n, n) for the Mahalanobis variant
+    metric: str = "l2"
+    encoder_kind: str = "cos"
+
+    method: ClassVar[str] = "loghd"
+    stored_leaves: ClassVar[tuple] = ("bundles", "profiles")
+    aux_fields: ClassVar[tuple] = ("metric", "encoder_kind")
+
+    def predict_encoded(self, h: jax.Array) -> jax.Array:
+        from repro.core.loghd import predict_loghd_encoded
+        return predict_loghd_encoded(self.to_dict(), h, self.metric)
+
+    def model_bits(self, bits: int) -> int:
+        from repro.core.loghd import memory_bits
+        n, d = _shape(self.bundles)
+        c, _ = _shape(self.profiles)
+        return memory_bits(c, d, n, bits)
+
+    @property
+    def n_classes(self) -> int:
+        return _shape(self.profiles)[0]
+
+    @property
+    def n_bundles(self) -> int:
+        return _shape(self.bundles)[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class HybridModel(HDModel):
+    """Class-axis + feature-axis: sparsified bundles + re-estimated profiles."""
+
+    enc: dict
+    bundles: Any                      # (n, D') f32 or QTensor
+    profiles: Any                     # (C, n) f32 or QTensor
+    keep: Any                         # (D',) int32
+    codebook: Any                     # (C, n) int32
+    metric: str = "l2"
+    encoder_kind: str = "cos"
+
+    method: ClassVar[str] = "hybrid"
+    stored_leaves: ClassVar[tuple] = ("bundles", "profiles")
+    aux_fields: ClassVar[tuple] = ("metric", "encoder_kind")
+
+    def predict_encoded(self, h: jax.Array) -> jax.Array:
+        from repro.core.hybrid import predict_hybrid_encoded
+        return predict_hybrid_encoded(self.to_dict(), h, self.metric)
+
+    def model_bits(self, bits: int) -> int:
+        n, d_kept = _shape(self.bundles)
+        c, _ = _shape(self.profiles)
+        d_full = self.enc["proj"].shape[1]
+        return n * d_kept * bits + c * n * bits + d_full
+
+    @property
+    def n_classes(self) -> int:
+        return _shape(self.profiles)[0]
+
+    @property
+    def n_bundles(self) -> int:
+        return _shape(self.bundles)[0]
+
+
+MODEL_CLASSES = {cls.method: cls for cls in
+                 (ConventionalModel, SparseHDModel, LogHDModel, HybridModel)}

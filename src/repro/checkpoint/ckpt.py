@@ -82,6 +82,20 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     return final
 
 
+def read_scalar_leaves(ckpt_dir: str, step: int) -> list:
+    """Values of the non-array (scalar) leaves of a committed checkpoint,
+    in leaf order — readable without constructing a target skeleton.
+    Encapsulates the on-disk manifest layout for metadata-first restores
+    (e.g. repro.api typed-model checkpoints)."""
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return [leaf["value"] for leaf in manifest["leaves"]
+            if leaf.get("kind") == "scalar"]
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     """Newest COMMITted step, or None."""
     if not os.path.isdir(ckpt_dir):

@@ -1,0 +1,36 @@
+"""Version-compatibility shims for the range of jax releases this repo
+runs on (the container ships 0.4.x; newer toolchains expose the same
+functionality under different names).
+
+  shard_map_checked — jax.shard_map (jax >= 0.5, `check_vma=`) or
+                      jax.experimental.shard_map.shard_map (0.4.x,
+                      `check_rep=`), with the check flag normalized.
+  axis_size         — jax.lax.axis_size, or the classic psum(1, axis)
+                      identity on releases without it (statically folded
+                      for non-traced constants, so it stays usable for
+                      shape arithmetic inside shard_map bodies).
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_checked(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """shard_map with the replication/vma check flag spelled portably."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
+
+
+def axis_size(axis_name: str):
+    """Size of a named mesh axis, usable inside shard_map bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -3,11 +3,25 @@
 This mirrors the paper's protocol (Sec. IV-A): train fp32, post-training
 quantize to b bits, flip each stored bit w.p. p before each test evaluation,
 evaluate on clean test inputs.  Encoders are shared and never corrupted.
+
+Accepts both model representations:
+
+  * typed models from ``repro.api`` (anything exposing ``stored_leaves``,
+    ``quantized``, ``corrupted``, ``materialized``, ``predict_encoded``) —
+    pass ``kind=None``/``predict_encoded=None`` and the model supplies its
+    own stored-leaf declaration and predict path;
+  * legacy raw dicts with an explicit ``kind`` + predict function
+    (deprecated; kept so external callers keep working).
+
+The predict function is jit-compiled once per (function, shape set) and
+cached module-wide, so the flip-trial loop and the fig3/fig5/fig6 benchmark
+sweeps reuse one compiled executable instead of re-tracing per trial per
+p-grid point.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +30,9 @@ import numpy as np
 from repro.core.faults import corrupt_model
 from repro.core.quantize import QTensor, dequantize_tree, quantize_tree
 
-# Which leaves of each model kind constitute the *stored* (budget-counted)
-# model state.  Everything else (encoder, index metadata) is shared/structural.
+# DEPRECATED: which leaves of each legacy dict-model kind constitute the
+# *stored* (budget-counted) state.  Typed models (repro.api.models) declare
+# their own `stored_leaves`; this table only serves the raw-dict path.
 STORED_LEAVES = {
     "conventional": ("protos",),
     "sparsehd": ("protos",),
@@ -27,7 +42,7 @@ STORED_LEAVES = {
 
 
 def quantize_stored(model: dict, kind: str, bits: int) -> dict:
-    """Quantize the stored leaves of `model` to `bits`-bit codes."""
+    """Quantize the stored leaves of a legacy dict `model` to `bits` bits."""
     stored = STORED_LEAVES[kind]
     out = dict(model)
     for name in stored:
@@ -40,23 +55,63 @@ def materialize(model: dict) -> dict:
     return dequantize_tree(model)
 
 
-def evaluate_under_flips(model: dict, kind: str, bits: int, p: float,
-                         predict_encoded: Callable, h_test: jax.Array,
-                         y_test: jax.Array, key: jax.Array,
-                         n_trials: int = 3, scope: str = "all") -> float:
-    """Mean test accuracy over `n_trials` independent flip draws."""
-    qmodel = quantize_stored(model, kind, bits)
+# One compiled predict executable per predict function.  Keys are the
+# module-level predict functions (legacy path) or the model class's unbound
+# ``predict_encoded`` (typed path) — both stable objects, so every flip
+# trial, p-grid point and sweep iteration with matching shapes reuses the
+# same trace.
+_PREDICT_JIT_CACHE: dict = {}
+
+
+def jit_predict(predict_encoded: Callable) -> Callable:
+    """Jit-compile ``predict_encoded(model, h) -> labels`` with caching."""
+    fn = _PREDICT_JIT_CACHE.get(predict_encoded)
+    if fn is None:
+        fn = jax.jit(predict_encoded)
+        _PREDICT_JIT_CACHE[predict_encoded] = fn
+    return fn
+
+
+def _is_typed(model) -> bool:
+    return hasattr(model, "stored_leaves") and not isinstance(model, dict)
+
+
+def evaluate_under_flips(model, kind: Optional[str], bits: int, p: float,
+                         predict_encoded: Optional[Callable],
+                         h_test: jax.Array, y_test: jax.Array,
+                         key: jax.Array, n_trials: int = 3,
+                         scope: str = "all") -> float:
+    """Mean test accuracy over `n_trials` independent flip draws.
+
+    Typed models: ``evaluate_under_flips(model, None, bits, p, None, ...)``
+    (or keyword-only).  Legacy dicts additionally need `kind` and a
+    ``predict_encoded(model_dict, h)`` function.
+    """
+    if _is_typed(model):
+        qmodel = model.quantized(bits)
+        pred = (predict_encoded if predict_encoded is not None
+                else type(model).predict_encoded)
+        corrupt = lambda m, sub: m.corrupted(p, sub, scope)
+        mat = lambda m: m.materialized()
+    else:
+        if kind is None or predict_encoded is None:
+            raise ValueError("legacy dict models need `kind` and "
+                             "`predict_encoded`")
+        qmodel = quantize_stored(model, kind, bits)
+        pred = predict_encoded
+        corrupt = lambda m, sub: corrupt_model(m, p, sub, scope=scope)
+        mat = materialize
+    pred_jit = jit_predict(pred)
     accs = []
-    for t in range(n_trials):
+    for _ in range(n_trials):
         key, sub = jax.random.split(key)
-        corrupted = (corrupt_model(qmodel, p, sub, scope=scope)
-                     if p > 0 else qmodel)
-        preds = predict_encoded(materialize(corrupted), h_test)
+        corrupted = corrupt(qmodel, sub) if p > 0 else qmodel
+        preds = pred_jit(mat(corrupted), h_test)
         accs.append(float(jnp.mean(preds == y_test)))
     return float(np.mean(accs))
 
 
-def accuracy(predict_encoded: Callable, model: dict, h_test: jax.Array,
+def accuracy(predict_encoded: Callable, model, h_test: jax.Array,
              y_test: jax.Array) -> float:
-    preds = predict_encoded(model, h_test)
+    preds = jit_predict(predict_encoded)(model, h_test)
     return float(jnp.mean(preds == y_test))

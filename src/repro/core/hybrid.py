@@ -6,6 +6,10 @@ keep-mask across bundles).  Activation profiles are re-estimated with the
 sparsified activations so decoding stays calibrated.
 
 Memory:  n * (1-S) * D + C * n   words (+ D mask bits).
+
+NOTE: the raw-dict surface here is the deprecated backend of the typed
+estimator API — new code should use
+`repro.api.make_classifier("hybrid", ...)` / `repro.api.HybridModel`.
 """
 
 from __future__ import annotations

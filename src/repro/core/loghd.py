@@ -14,6 +14,12 @@ Pipeline (Algorithm 1):
   (5) optional refinement    Eq. 9 perceptron updates, T epochs
       (+ profile re-estimation so decoding stays consistent)
   (6) inference              argmin_c ||A(x_q) - P_c||^2         (Eq. 7)
+
+NOTE: the raw-dict surface here (`fit_loghd` returning a dict,
+`predict_loghd_encoded(dict, h)`) is the deprecated backend of the typed
+estimator API — new code should use `repro.api.make_classifier("loghd", ...)`
+/ `repro.api.LogHDModel`, which wrap these functions.  See ROADMAP
+"Open items" for the removal plan.
 """
 
 from __future__ import annotations
@@ -69,12 +75,24 @@ def conventional_memory_bits(n_classes: int, dim: int, bits: int) -> int:
 
 
 def max_bundles_for_budget(budget_fraction: float, n_classes: int, dim: int,
-                           k: int) -> int:
+                           k: int, *, strict: bool = True) -> int:
     """Largest n with  n*D + C*n  <=  x * C * D  (same precision both sides).
 
     Feasible only if the result >= ceil(log_k C) — the paper's minimum-budget
-    floor ceil(log_k C)/C (Sec. IV-B)."""
+    floor ceil(log_k C)/C (Sec. IV-B).  When the budget sits below that
+    floor, `strict=True` (default) raises ValueError; `strict=False` clamps
+    to the floor `min_bundles(C, k)` (the returned n then *exceeds* the
+    requested budget — callers must re-check the accounting)."""
     n = int(budget_fraction * n_classes * dim / (dim + n_classes))
+    floor = cb.min_bundles(n_classes, k)
+    if n < floor:
+        if strict:
+            raise ValueError(
+                f"budget fraction {budget_fraction} allows n={n} bundles but "
+                f"unique k={k} codes for C={n_classes} classes need at least "
+                f"ceil(log_{k} {n_classes}) = {floor} (paper Sec. IV-B "
+                f"feasibility floor); pass strict=False to clamp")
+        return floor
     return n
 
 

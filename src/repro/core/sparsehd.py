@@ -14,6 +14,10 @@ Saliency options (SparseHD uses the class-value spread):
 After pruning, a few OnlineHD-style retraining passes over the *kept*
 coordinates recover most of the clean-accuracy loss (the paper's SparseHD
 uses iterative retraining; we expose `retrain_epochs`).
+
+NOTE: the raw-dict surface here is the deprecated backend of the typed
+estimator API — new code should use
+`repro.api.make_classifier("sparsehd", ...)` / `repro.api.SparseHDModel`.
 """
 
 from __future__ import annotations

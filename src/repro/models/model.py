@@ -183,14 +183,16 @@ def head_logits(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     """x: (..., D) -> (..., V) f32 logits."""
     if cfg.head == "dense":
         return dense_head_logits(params["head"], x)
-    # LogHD head: activation vs bundles, then profile-decode scores.
-    # (the Pallas kernels implement exactly this fused; the jnp form below is
-    # what jit/pjit traces for the distributed dry-run.)
-    m = params["head"]["bundles"]
-    p = params["head"]["profiles"].astype(jnp.float32)
-    a = (x @ m.T).astype(jnp.float32)                       # (..., n)
-    return (2.0 * a @ p.T - jnp.sum(p * p, axis=-1)
-            - jnp.sum(a * a, axis=-1, keepdims=True))
+    # LogHD head: activation vs bundles, then profile-decode scores, through
+    # the unified classifier-head dispatch (fused Pallas kernel on compiled
+    # TPU backends; the jnp expansion under sharded/pjit tracing and on CPU,
+    # which is what the distributed dry-run traces).
+    from repro.api.dispatch import loghd_head_scores
+    from repro.models.sharding import get_context_mesh
+    use_kernel = None if get_context_mesh() is None else False
+    return loghd_head_scores(x, params["head"]["bundles"],
+                             params["head"]["profiles"],
+                             use_kernel=use_kernel)
 
 
 def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,

@@ -63,14 +63,22 @@ def run_serving(cfg: ModelConfig, params, requests: list[Request],
         req = queue.pop(0)
         active[slot] = req
         outputs[req.uid] = []
+        logits = None
         for t, tok in enumerate(req.prompt):
             tok_b = jnp.asarray(cur).at[slot, 0].set(int(tok))
             logits, state = step_jit(params, state, tok_b,
                                      jnp.asarray(t, jnp.int32))
-        cur[slot, 0] = int(jnp.argmax(logits[slot, 0]))
+        if logits is not None:
+            cur[slot, 0] = int(jnp.argmax(logits[slot, 0]))
+            outputs[req.uid].append(int(cur[slot, 0]))
+        else:
+            # Empty prompt: nothing was prefilled, so there are no logits to
+            # sample from.  Seed the slot deterministically from token 0 (a
+            # fixed BOS surrogate); the shared decode step below generates
+            # the first real token.
+            cur[slot, 0] = 0
         pos[slot] = len(req.prompt)
         progress[slot] = 0
-        outputs[req.uid].append(int(cur[slot, 0]))
 
     # NOTE: single shared `pos` per step keeps the loop simple (slots are
     # stepped at the max position); production serving would track per-slot

@@ -97,11 +97,12 @@ def test_seq_sharded_flash_decode_matches():
             out, newc = decode_attention_seqsharded(p, cfg, x, c, pos,
                                                     axis="data")
             return out, newc
-        got, _ = jax.jit(jax.shard_map(
+        from repro.compat import shard_map_checked
+        got, _ = jax.jit(shard_map_checked(
             body, mesh=mesh,
             in_specs=(P(), P(), {"k": P(None, "data"), "v": P(None, "data")}),
             out_specs=(P(), {"k": P(None, "data"), "v": P(None, "data")}),
-            check_vma=False))(params, x, cache)
+            check=False))(params, x, cache)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=2e-4, atol=2e-4)
         print("OK")
@@ -120,9 +121,10 @@ def test_grad_compression_error_feedback():
             mean, new_err = compressed_psum(g[0], "pod", err[0])
             return mean[None], new_err[None]
         err0 = jnp.zeros((8, 64, 32))
-        mean, err = jax.jit(jax.shard_map(
+        from repro.compat import shard_map_checked
+        mean, err = jax.jit(shard_map_checked(
             body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-            out_specs=(P("pod"), P("pod")), check_vma=False))(g_global, err0)
+            out_specs=(P("pod"), P("pod")), check=False))(g_global, err0)
         want = jnp.mean(g_global, axis=0)
         # int8 quantized mean within a couple scale steps of the true mean
         scale = jnp.max(jnp.abs(g_global)) / 127.0
