@@ -73,8 +73,9 @@ def ratios(bps):
 
 
 def fig3_rows(quick: bool = True):
-    """Run the fig3 sweep in-process (typed estimator API) and return its
-    rows in the parsed format — no CSV round-trip needed."""
+    """Run the fig3 sweep in-process (device-resident fault-sweep engine,
+    one jit per (method, scope) cell) and return its rows in the parsed
+    format — no CSV round-trip needed."""
     from benchmarks.fig3_bitflip import run
     return [(ds, float(budget), int(bits), scope, method, float(p),
              float(acc))

@@ -2,11 +2,11 @@
 model-size budgets, across datasets — SparseHD vs LogHD (k in {2,3}) vs
 Hybrid.
 
-Models are built through the typed estimator API (benchmarks.common); each
-method contributes its typed model and the evaluation harness uses the
-model's own stored-leaf declaration and jit-cached predict path — one
-compiled executable per method per dataset, shared across every
-(scope, p, trial) point below.
+Models are built through the typed estimator API (benchmarks.common) and
+each (method, scope) cell runs through the device-resident fault-sweep
+engine: ONE ``sweep_under_flips`` call computes the whole (p-grid x trials)
+accuracy surface inside one jit-compiled executable with a single host
+transfer, instead of one corrupt->predict round-trip per grid point.
 
 Reports BOTH fault scopes (DESIGN.md / EXPERIMENTS.md §Paper-claims):
   all — flips on bundles/prototypes AND activation profiles (paper text)
@@ -23,7 +23,7 @@ import numpy as np
 
 from benchmarks.common import (dataset_fixture, hybrid_for_budget,
                                loghd_for_budget, sparsehd_for_budget)
-from repro.core.evaluate import evaluate_under_flips
+from repro.core.evaluate import sweep_under_flips
 
 P_GRID = [0.0, 0.01, 0.02, 0.05, 0.1, 0.15, 0.2, 0.3, 0.4]
 BUDGETS = [0.2, 0.4]
@@ -51,11 +51,12 @@ def run(bits: int = 4, datasets=None, budgets=None, trials: int = 2,
             methods.append(("hybrid", hybrid_for_budget(fx, budget).model))
             for scope in ("all", "hv"):
                 for name, model in methods:
-                    for p in p_grid:
-                        acc = evaluate_under_flips(
-                            model, None, bits, p, None, fx["h_te"],
-                            fx["y_te"], key, trials, scope)
-                        rows.append((ds, budget, bits, scope, name, p, acc))
+                    accs = sweep_under_flips(
+                        model, bits, p_grid, fx["h_te"], fx["y_te"], key,
+                        n_trials=trials, scope=scope)
+                    for p, acc in zip(p_grid, accs.mean(axis=1)):
+                        rows.append((ds, budget, bits, scope, name, p,
+                                     float(acc)))
     return rows
 
 

@@ -10,7 +10,7 @@ import jax
 
 from benchmarks.common import (dataset_fixture, loghd_for_budget,
                                sparsehd_for_budget)
-from repro.core.evaluate import evaluate_under_flips
+from repro.core.evaluate import sweep_under_flips
 
 DIMS = [2000, 10_000]
 BITS = [1, 2, 4, 8]
@@ -27,15 +27,14 @@ def run(dataset: str = "ucihar", budget: float = 0.4, quick: bool = False):
         lm = loghd_for_budget(fx, budget).model
         sm = sparsehd_for_budget(fx, budget).model
         for bits in bits_grid:
-            for p in P_GRID:
-                la = evaluate_under_flips(lm, None, bits, p, None,
-                                          fx["h_te"], fx["y_te"], key, 2,
-                                          "all")
-                sa = evaluate_under_flips(sm, None, bits, p, None,
-                                          fx["h_te"], fx["y_te"], key, 2,
-                                          "all")
-                rows.append((dataset, dim, bits, "loghd", p, la))
-                rows.append((dataset, dim, bits, "sparsehd", p, sa))
+            la = sweep_under_flips(lm, bits, P_GRID, fx["h_te"],
+                                   fx["y_te"], key, n_trials=2).mean(axis=1)
+            sa = sweep_under_flips(sm, bits, P_GRID, fx["h_te"],
+                                   fx["y_te"], key, n_trials=2).mean(axis=1)
+            for p, l_acc, s_acc in zip(P_GRID, la, sa):
+                rows.append((dataset, dim, bits, "loghd", p, float(l_acc)))
+                rows.append((dataset, dim, bits, "sparsehd", p,
+                             float(s_acc)))
     return rows
 
 

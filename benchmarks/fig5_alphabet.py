@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.common import dataset_fixture
 from repro.api import make_classifier
 from repro.core.codebook import min_bundles
-from repro.core.evaluate import evaluate_under_flips
+from repro.core.evaluate import sweep_under_flips
 
 KS = [2, 3, 4, 8]
 P_GRID = [0.0, 0.3]
@@ -38,11 +38,12 @@ def run(datasets=("page", "ucihar"), bits: int = 1, quick: bool = False):
                 clf = clf.fit(fx["x_tr"], fx["y_tr"],
                               prototypes=fx["protos"], enc=fx["enc"],
                               encoded=fx["h_tr"])
-                for p in P_GRID:
-                    acc = evaluate_under_flips(
-                        clf.model, None, bits, p, None,
-                        fx["h_te"], fx["y_te"], key, 2, "all")
-                    rows.append((ds, k, n, round(n / c, 3), bits, p, acc))
+                accs = sweep_under_flips(
+                    clf.model, bits, P_GRID, fx["h_te"], fx["y_te"], key,
+                    n_trials=2).mean(axis=1)
+                for p, acc in zip(P_GRID, accs):
+                    rows.append((ds, k, n, round(n / c, 3), bits, p,
+                                 float(acc)))
     return rows
 
 

@@ -13,7 +13,7 @@ import numpy as np
 from benchmarks.common import dataset_fixture
 from repro.api import make_classifier
 from repro.core.codebook import min_bundles
-from repro.core.evaluate import evaluate_under_flips
+from repro.core.evaluate import sweep_under_flips
 
 RETAINS = [0.25, 0.5, 0.75, 1.0]
 P_GRID = [0.0, 0.1, 0.3]
@@ -40,11 +40,11 @@ def run(dataset: str = "isolet", bits: int = 4, quick: bool = False):
                 loghd=base_clf.cfg, sparsity=1.0 - retain)
             clf = clf.fit(fx["x_tr"], fx["y_tr"], base=base_clf.model,
                           encoded=fx["h_tr"])
-            for p in P_GRID:
-                acc = evaluate_under_flips(
-                    clf.model, None, bits, p, None,
-                    fx["h_te"], fx["y_te"], key, 2, "all")
-                rows.append((dataset, n, retain, bits, p, acc))
+            accs = sweep_under_flips(
+                clf.model, bits, P_GRID, fx["h_te"], fx["y_te"], key,
+                n_trials=2).mean(axis=1)
+            for p, acc in zip(P_GRID, accs):
+                rows.append((dataset, n, retain, bits, p, float(acc)))
     return rows
 
 

@@ -6,10 +6,15 @@
   fig6_hybrid        — Fig. 6: hybrid n x sparsity heatmap
   table2_efficiency  — Table II: modeled ASIC/CPU/GPU efficiency ratios
   kernels_bench      — Pallas kernel spot checks + derived numbers
+  fault_sweep_bench  — fused sweep engine vs frozen legacy per-trial loop;
+                       appends a perf-trajectory record to
+                       BENCH_fault_sweep.json at the repo root
 
-`python -m benchmarks.run` runs the QUICK suite (the 1-core CPU container
-cannot finish the full grids in reasonable time); `--full` runs everything.
-Full CSVs land on stdout; EXPERIMENTS.md records a curated full run.
+`python -m benchmarks.run` (or `--quick`) runs the QUICK suite (the 1-core
+CPU container cannot finish the full grids in reasonable time); `--full`
+runs everything.  Full CSVs land on stdout; EXPERIMENTS.md records a
+curated full run.  CI runs `--quick --only fault_sweep` as a smoke stage
+and uploads the JSON artifact so the perf trend is recorded per PR.
 """
 
 from __future__ import annotations
@@ -22,15 +27,19 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick suite (the default; --full wins)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (fig3_bitflip, fig4_dim_quant, fig5_alphabet,
-                            fig6_hybrid, kernels_bench, table2_efficiency)
+    from benchmarks import (fault_sweep_bench, fig3_bitflip, fig4_dim_quant,
+                            fig5_alphabet, fig6_hybrid, kernels_bench,
+                            table2_efficiency)
     suites = {
         "table2": table2_efficiency,
         "kernels": kernels_bench,
+        "fault_sweep": fault_sweep_bench,
         "fig5": fig5_alphabet,
         "fig4": fig4_dim_quant,
         "fig6": fig6_hybrid,

@@ -8,9 +8,9 @@ Every method is constructed the same way:
     clf = clf.fit(x_train, y_train)
 
 and the robustness protocol is the uniform pipeline
-``quantized(bits) -> corrupted(p, key) -> predict`` that
-``evaluate_under_flips`` drives with one jit-cached predict executable per
-method.
+``quantized(bits) -> corrupted(p, key) -> predict``, swept by the
+device-resident fault-sweep engine: one ``sweep_under_flips`` call runs the
+whole (p-grid x trials) surface inside a single jit-compiled executable.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import make_classifier
-from repro.core.evaluate import evaluate_under_flips
 from repro.data.synth import load_dataset
 from repro.hdc.conventional import class_prototypes
 from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
@@ -62,13 +61,14 @@ def main():
 
     print("\nbit-flip robustness (1-bit models, bulk-memory scope):")
     key = jax.random.PRNGKey(0)
+    p_grid = [0.0, 0.1, 0.2, 0.3, 0.4]
+    la = log.sweep_under_flips(1, p_grid, h_te, y_te, key, n_trials=2,
+                               scope="hv").mean(axis=1)
+    sa = sp.sweep_under_flips(1, p_grid, h_te, y_te, key, n_trials=2,
+                              scope="hv").mean(axis=1)
     print("  p     LogHD  SparseHD")
-    for p in [0.0, 0.1, 0.2, 0.3, 0.4]:
-        la = evaluate_under_flips(log.model, None, 1, p, None,
-                                  h_te, y_te, key, 2, "hv")
-        sa = evaluate_under_flips(sp.model, None, 1, p, None,
-                                  h_te, y_te, key, 2, "hv")
-        print(f"  {p:.2f}  {la:.3f}  {sa:.3f}")
+    for p, l_acc, s_acc in zip(p_grid, la, sa):
+        print(f"  {p:.2f}  {l_acc:.3f}  {s_acc:.3f}")
 
 
 if __name__ == "__main__":

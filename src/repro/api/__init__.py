@@ -47,12 +47,14 @@ removal plan).
 """
 
 from repro.api.checkpointing import load_model, model_spec, save_model
-from repro.api.dispatch import (kernels_qualify, loghd_head_scores,
+from repro.api.dispatch import (corrupt_dequant, corrupt_materialize,
+                                kernels_qualify, loghd_head_scores,
                                 predict_encoded, predict_fn)
 from repro.api.models import (MODEL_CLASSES, ConventionalModel, HDModel,
                               HybridModel, LogHDModel, SparseHDModel)
 from repro.api.registry import (HDClassifier, MethodSpec, available_methods,
                                 get_method, make_classifier, register_method)
+from repro.core.evaluate import sweep_under_flips
 
 __all__ = [
     "HDModel", "ConventionalModel", "SparseHDModel", "LogHDModel",
@@ -60,5 +62,6 @@ __all__ = [
     "MethodSpec", "register_method", "get_method", "available_methods",
     "make_classifier", "HDClassifier",
     "predict_fn", "predict_encoded", "kernels_qualify", "loghd_head_scores",
+    "corrupt_dequant", "corrupt_materialize", "sweep_under_flips",
     "save_model", "load_model", "model_spec",
 ]

@@ -23,13 +23,16 @@ import jax.numpy as jnp
 
 from repro.api.models import (ConventionalModel, HDModel, HybridModel,
                               LogHDModel, SparseHDModel)
+from repro.core.quantize import QTensor
 from repro.kernels import common as kcommon
 from repro.kernels.bundle_sim.ops import bundle_similarity
+from repro.kernels.flip_corrupt.ops import flip_corrupt
 from repro.kernels.loghd_head.ops import loghd_head_logits
 from repro.kernels.profile_decode.ops import profile_decode_scores
 
 __all__ = ["kernels_qualify", "predict_fn", "predict_encoded",
-           "loghd_head_scores", "clear_cache"]
+           "loghd_head_scores", "corrupt_dequant", "corrupt_materialize",
+           "clear_cache"]
 
 
 def _l2n(v, axis=-1, eps=1e-12):
@@ -106,6 +109,64 @@ def loghd_head_scores(x: jax.Array, bundles: jax.Array, profiles: jax.Array,
             - jnp.sum(a * a, axis=-1, keepdims=True))
 
 
+def corrupt_dequant(q: QTensor, p, key: jax.Array,
+                    use_kernel: Optional[bool] = None) -> jax.Array:
+    """Fused flip->sign-extend->dequantize of one QTensor leaf.
+
+    Dispatches to the ``flip_corrupt`` Pallas kernel (one HBM pass,
+    in-kernel PRNG) on compiled TPU backends, and to the jnp path
+    (``faults.flip_bits_int`` + dequantize — threefry, key-for-key
+    reproducible with the rest of the repo) otherwise.  The two paths draw
+    different PRNG streams but the same flip distribution."""
+    from repro.core.faults import flip_bits_int
+    from repro.core.quantize import dequantize
+    if use_kernel is None:
+        use_kernel = kernels_qualify()
+    if use_kernel:
+        seed = jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max)
+        return flip_corrupt(q.codes, q.scale, q.bits, p, seed)
+    return dequantize(flip_bits_int(q, p, key))
+
+
+def corrupt_materialize(model: HDModel, p, key: jax.Array,
+                        scope: str = "all",
+                        use_kernel: Optional[bool] = None) -> HDModel:
+    """Corrupt + materialize a typed model's stored state in one pass.
+
+    The fault-sweep engine's per-trial body.  On qualifying backends every
+    QTensor leaf goes through the fused ``flip_corrupt`` kernel (corrupt and
+    dequantize in one HBM pass); elsewhere this is exactly
+    ``model.corrupted(p, key, scope).materialized()``, preserving the
+    dict-path per-leaf key assignment bit for bit."""
+    if use_kernel is None:
+        use_kernel = kernels_qualify()
+    if not use_kernel:
+        return model.corrupted(p, key, scope).materialized()
+
+    from repro.core.faults import fault_skip_set, flip_bits_f32
+    from repro.core.quantize import dequantize
+    skip = fault_skip_set(scope)
+    d = {k: v for k, v in model.to_dict().items() if k != "enc"}
+    keys = jax.random.split(key, max(len(d), 1))
+    out = {}
+    for i, (name, leaf) in enumerate(d.items()):
+        if name in skip:
+            # protected leaves still materialize (e.g. "hv"-scope profiles)
+            out[name] = dequantize(leaf) if isinstance(leaf, QTensor) else leaf
+        elif isinstance(leaf, QTensor):
+            out[name] = corrupt_dequant(leaf, p, keys[i], use_kernel=True)
+        elif jnp.issubdtype(leaf.dtype, jnp.floating):
+            out[name] = flip_bits_f32(leaf, p, keys[i])
+        else:
+            out[name] = leaf
+    out["enc"] = model.enc
+    aux = {n: getattr(model, n) for n in model.aux_fields}
+    return type(model).from_dict(out, **aux)
+
+
 def clear_cache() -> None:
-    """Drop all cached compiled predict callables (tests / notebooks)."""
+    """Drop all cached compiled predict/sweep executables (tests /
+    notebooks), including core.evaluate's module-wide caches."""
+    from repro.core.evaluate import clear_caches
     _predict_jit.cache_clear()
+    clear_caches()

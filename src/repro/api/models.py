@@ -120,6 +120,26 @@ class HDModel:
                 updates[name] = dequantize_tree(v)
         return self.replace(**updates) if updates else self
 
+    def corrupted_materialized(self, p, key: jax.Array,
+                               scope: str = "all") -> "HDModel":
+        """Corrupt + dequantize in one step — the fault-sweep trial body.
+
+        Dispatches to the fused ``flip_corrupt`` Pallas kernel on compiled
+        TPU backends (one HBM pass per stored leaf) and is exactly
+        ``corrupted(p, key, scope).materialized()`` elsewhere."""
+        from repro.api.dispatch import corrupt_materialize
+        return corrupt_materialize(self, p, key, scope)
+
+    def sweep_under_flips(self, bits: int, p_grid, h_test: jax.Array,
+                          y_test, key: jax.Array, *, n_trials: int = 3,
+                          scope: str = "all", p_chunk=None):
+        """(|p_grid|, n_trials) accuracy matrix from the device-resident
+        fault-sweep engine (one jit, single host transfer)."""
+        from repro.core.evaluate import sweep_under_flips
+        return sweep_under_flips(self, bits, p_grid, h_test, y_test, key,
+                                 n_trials=n_trials, scope=scope,
+                                 p_chunk=p_chunk)
+
     # --------------------------------------------------------- interface --
     def predict_encoded(self, h: jax.Array) -> jax.Array:
         raise NotImplementedError
@@ -177,8 +197,8 @@ class SparseHDModel(HDModel):
     aux_fields: ClassVar[tuple] = ("encoder_kind",)
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.core.sparsehd import predict_sparsehd_encoded
-        return predict_sparsehd_encoded(self.to_dict(), h)
+        from repro.core.sparsehd import _predict_sparsehd_encoded
+        return _predict_sparsehd_encoded(self.to_dict(), h)
 
     def model_bits(self, bits: int) -> int:
         # same accounting as core.sparsehd.sparsehd_memory_bits, inlined so
@@ -210,8 +230,8 @@ class LogHDModel(HDModel):
     aux_fields: ClassVar[tuple] = ("metric", "encoder_kind")
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.core.loghd import predict_loghd_encoded
-        return predict_loghd_encoded(self.to_dict(), h, self.metric)
+        from repro.core.loghd import _predict_loghd_encoded
+        return _predict_loghd_encoded(self.to_dict(), h, self.metric)
 
     def model_bits(self, bits: int) -> int:
         from repro.core.loghd import memory_bits
@@ -246,8 +266,8 @@ class HybridModel(HDModel):
     aux_fields: ClassVar[tuple] = ("metric", "encoder_kind")
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.core.hybrid import predict_hybrid_encoded
-        return predict_hybrid_encoded(self.to_dict(), h, self.metric)
+        from repro.core.hybrid import _predict_hybrid_encoded
+        return _predict_hybrid_encoded(self.to_dict(), h, self.metric)
 
     def model_bits(self, bits: int) -> int:
         n, d_kept = _shape(self.bundles)

@@ -127,6 +127,15 @@ class HDClassifier:
     def materialized(self) -> "HDClassifier":
         return self.with_model(self._require_model().materialized())
 
+    def sweep_under_flips(self, bits: int, p_grid, h_test, y_test, key, *,
+                          n_trials: int = 3, scope: str = "all",
+                          p_chunk=None):
+        """(|p_grid|, n_trials) accuracy matrix from the device-resident
+        fault-sweep engine (one jit, single host transfer)."""
+        return self._require_model().sweep_under_flips(
+            bits, p_grid, h_test, y_test, key, n_trials=n_trials,
+            scope=scope, p_chunk=p_chunk)
+
     def model_bits(self, bits: int) -> int:
         return self._require_model().model_bits(bits)
 
@@ -156,39 +165,39 @@ def make_classifier(name: str, n_classes: int,
 
 def _fit_conventional(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
                       prototypes=None, base=None) -> ConventionalModel:
-    from repro.hdc.conventional import fit_conventional
+    from repro.hdc.conventional import _fit_conventional as fit_impl
     if prototypes is not None and enc is not None and cfg.refine_epochs == 0:
         return ConventionalModel(enc=enc, protos=prototypes,
                                  encoder_kind=enc_cfg.kind)
     return ConventionalModel.from_dict(
-        fit_conventional(cfg, enc_cfg, x, y, enc=enc, encoded=encoded),
+        fit_impl(cfg, enc_cfg, x, y, enc=enc, encoded=encoded),
         encoder_kind=enc_cfg.kind)
 
 
 def _fit_sparsehd(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
                   prototypes=None, base=None) -> SparseHDModel:
-    from repro.core.sparsehd import fit_sparsehd
+    from repro.core.sparsehd import _fit_sparsehd as fit_impl
     return SparseHDModel.from_dict(
-        fit_sparsehd(cfg, enc_cfg, x, y, prototypes=prototypes, enc=enc,
-                     encoded=encoded),
+        fit_impl(cfg, enc_cfg, x, y, prototypes=prototypes, enc=enc,
+                 encoded=encoded),
         encoder_kind=enc_cfg.kind)
 
 
 def _fit_loghd(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
                prototypes=None, base=None) -> LogHDModel:
-    from repro.core.loghd import fit_loghd
+    from repro.core.loghd import _fit_loghd as fit_impl
     return LogHDModel.from_dict(
-        fit_loghd(cfg, enc_cfg, x, y, prototypes=prototypes, enc=enc,
-                  encoded=encoded),
+        fit_impl(cfg, enc_cfg, x, y, prototypes=prototypes, enc=enc,
+                 encoded=encoded),
         metric=cfg.metric, encoder_kind=enc_cfg.kind)
 
 
 def _fit_hybrid(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
                 prototypes=None, base=None) -> HybridModel:
-    from repro.core.hybrid import fit_hybrid
+    from repro.core.hybrid import _fit_hybrid as fit_impl
     base_dict = base.to_dict() if isinstance(base, HDModel) else base
     return HybridModel.from_dict(
-        fit_hybrid(cfg, enc_cfg, x, y, base=base_dict, encoded=encoded),
+        fit_impl(cfg, enc_cfg, x, y, base=base_dict, encoded=encoded),
         metric=cfg.loghd.metric, encoder_kind=enc_cfg.kind)
 
 

@@ -4,6 +4,15 @@ This mirrors the paper's protocol (Sec. IV-A): train fp32, post-training
 quantize to b bits, flip each stored bit w.p. p before each test evaluation,
 evaluate on clean test inputs.  Encoders are shared and never corrupted.
 
+The hot path is the **device-resident fault-sweep engine**,
+``sweep_under_flips``: the whole (p-grid x trials) robustness surface runs
+inside ONE jit-compiled executable — trials are vmapped, the p-grid is
+scanned in vmap-sized chunks (``lax.map``), and the corrupt -> materialize ->
+predict -> accuracy composition never leaves the device until the final
+(|p_grid|, n_trials) accuracy matrix is transferred in a single host copy.
+``evaluate_under_flips`` is a thin single-p wrapper over the same engine, so
+legacy callers keep their signature and key-for-key reproducibility.
+
 Accepts both model representations:
 
   * typed models from ``repro.api`` (anything exposing ``stored_leaves``,
@@ -13,27 +22,27 @@ Accepts both model representations:
   * legacy raw dicts with an explicit ``kind`` + predict function
     (deprecated; kept so external callers keep working).
 
-The predict function is jit-compiled once per (function, shape set) and
-cached module-wide, so the flip-trial loop and the fig3/fig5/fig6 benchmark
-sweeps reuse one compiled executable instead of re-tracing per trial per
-p-grid point.
+Compiled executables are cached module-wide per (predict path, scope), so
+every flip trial, p-grid point and benchmark sweep with matching shapes
+reuses one trace.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.faults import corrupt_model
-from repro.core.quantize import QTensor, dequantize_tree, quantize_tree
+from repro.core.quantize import dequantize_tree, quantize_tree
+from repro.deprecation import warn_dict_api
 
-# DEPRECATED: which leaves of each legacy dict-model kind constitute the
-# *stored* (budget-counted) state.  Typed models (repro.api.models) declare
-# their own `stored_leaves`; this table only serves the raw-dict path.
-STORED_LEAVES = {
+# DEPRECATED (module __getattr__ warns on access): which leaves of each
+# legacy dict-model kind constitute the *stored* (budget-counted) state.
+# Typed models (repro.api.models) declare their own `stored_leaves`.
+_STORED_LEAVES = {
     "conventional": ("protos",),
     "sparsehd": ("protos",),
     "loghd": ("bundles", "profiles"),
@@ -41,13 +50,30 @@ STORED_LEAVES = {
 }
 
 
-def quantize_stored(model: dict, kind: str, bits: int) -> dict:
-    """Quantize the stored leaves of a legacy dict `model` to `bits` bits."""
-    stored = STORED_LEAVES[kind]
+def __getattr__(name: str):
+    if name == "STORED_LEAVES":
+        warn_dict_api("core.evaluate.STORED_LEAVES",
+                      "the model class's own `stored_leaves` declaration",
+                      stacklevel=2)
+        return _STORED_LEAVES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _quantize_stored(model: dict, kind: str, bits: int) -> dict:
+    stored = _STORED_LEAVES[kind]
     out = dict(model)
     for name in stored:
         out[name] = quantize_tree({name: model[name]}, bits)[name]
     return out
+
+
+def quantize_stored(model: dict, kind: str, bits: int) -> dict:
+    """DEPRECATED: quantize the stored leaves of a legacy dict `model`.
+
+    Use ``model.quantized(bits)`` on a typed ``repro.api`` model instead."""
+    warn_dict_api("core.evaluate.quantize_stored",
+                  "repro.api model.quantized(bits)")
+    return _quantize_stored(model, kind, bits)
 
 
 def materialize(model: dict) -> dict:
@@ -76,6 +102,133 @@ def _is_typed(model) -> bool:
     return hasattr(model, "stored_leaves") and not isinstance(model, dict)
 
 
+# --------------------------------------------------------- sweep engine ----
+
+def trial_keys(key: jax.Array, n_trials: int) -> jax.Array:
+    """The legacy per-trial subkey chain (key -> split -> sub, repeated).
+
+    ``evaluate_under_flips`` historically drew its trial keys this way; the
+    sweep engine reuses the chain so single-p results are key-for-key
+    reproducible against the per-trial loop."""
+    subs = []
+    for _ in range(n_trials):
+        key, sub = jax.random.split(key)
+        subs.append(sub)
+    return jnp.stack(subs)
+
+
+# One compiled sweep executable per (corrupt+predict path, scope, bits).
+# Shape specialization within an entry is handled by jax.jit itself.
+_SWEEP_JIT_CACHE: dict = {}
+
+
+def _sweep_fn(pred: Callable, scope: str, typed: bool,
+              bits: Optional[int]) -> Callable:
+    """Build (and cache) the jit-compiled sweep executable.
+
+    The compiled graph computes, fully on device:
+
+        quantize stored leaves to `bits`                 # hoisted, once
+        for each p-chunk (lax.map):              # sequential, bounds memory
+          for each p in chunk (vmap):            # batched
+            for each trial key (vmap):           # batched
+              corrupt(qmodel, p, key) -> materialize -> predict -> accuracy
+
+    With the default single chunk the two vmaps collapse the whole grid into
+    one batched corrupt + one batched predict: XLA contracts the test
+    encodings against every (p, trial) model variant in a single pass
+    instead of streaming them once per grid point.  Quantization is part of
+    the graph (typed path), so no eager per-leaf work remains on the host.
+    """
+    cache_key = (pred, scope, typed, bits)
+    fn = _SWEEP_JIT_CACHE.get(cache_key)
+    if fn is not None:
+        return fn
+
+    if typed:
+        def corrupt_mat(qmodel, p, sub):
+            return qmodel.corrupted_materialized(p, sub, scope)
+    else:
+        def corrupt_mat(qmodel, p, sub):
+            return materialize(corrupt_model(qmodel, p, sub, scope=scope))
+
+    def sweep(model, h, y, p_chunks, tkeys):
+        qmodel = model.quantized(bits) if typed else model
+
+        def one(p, sub):
+            preds = pred(corrupt_mat(qmodel, p, sub), h)
+            return jnp.mean((preds == y).astype(jnp.float32))
+
+        per_chunk = jax.vmap(
+            lambda p: jax.vmap(lambda sub: one(p, sub))(tkeys))
+        return jax.lax.map(per_chunk, p_chunks)
+
+    fn = jax.jit(sweep)
+    _SWEEP_JIT_CACHE[cache_key] = fn
+    return fn
+
+
+def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
+                      h_test: jax.Array, y_test, key: jax.Array, *,
+                      n_trials: int = 3, scope: str = "all",
+                      kind: Optional[str] = None,
+                      predict_encoded: Optional[Callable] = None,
+                      p_chunk: Optional[int] = None) -> np.ndarray:
+    """Full (|p_grid|, n_trials) accuracy matrix in one device-resident jit.
+
+    Quantizes the stored model once, then runs every (p, trial) grid point
+    inside a single compiled executable — vmapped over trial keys, scanned
+    over the p-grid in chunks of ``p_chunk`` (default: the whole grid in one
+    vmapped chunk; set a smaller chunk to bound transient memory on huge
+    grids) — and returns the accuracy matrix with a single host transfer.
+
+    The same trial keys are reused for every p (common random numbers, and
+    exactly what the historical per-p ``evaluate_under_flips`` calls did),
+    so robustness curves are monotone-comparable across p.
+
+    Typed models: ``sweep_under_flips(model, bits, p_grid, h, y, key)``.
+    Legacy dicts additionally need ``kind`` and a ``predict_encoded`` —
+    that path is deprecated along with the rest of the raw-dict surface.
+    Compiled executables are cached on the identity of the predict
+    callable: pass a stable (module-level) function, not a fresh lambda
+    per call, or every call re-traces and re-compiles.
+    """
+    n_trials = int(n_trials)
+    if n_trials < 1:
+        raise ValueError("n_trials must be >= 1")
+    p_arr = jnp.asarray(list(p_grid), jnp.float32)
+    n_p = int(p_arr.shape[0])
+    if n_p == 0:
+        return np.zeros((0, n_trials), np.float32)
+
+    if _is_typed(model):
+        qmodel = model                 # quantization happens inside the jit
+        pred = (predict_encoded if predict_encoded is not None
+                else type(model).predict_encoded)
+        typed = True
+    else:
+        if kind is None or predict_encoded is None:
+            raise ValueError("legacy dict models need `kind` and "
+                             "`predict_encoded`")
+        qmodel = _quantize_stored(model, kind, bits)
+        pred = predict_encoded
+        typed = False
+
+    chunk = n_p if p_chunk is None else max(1, min(int(p_chunk), n_p))
+    n_chunks = -(-n_p // chunk)
+    pad = n_chunks * chunk - n_p
+    if pad:
+        p_arr = jnp.concatenate([p_arr, jnp.zeros((pad,), jnp.float32)])
+    p_chunks = p_arr.reshape(n_chunks, chunk)
+
+    tkeys = trial_keys(key, n_trials)
+    sweep = _sweep_fn(pred, scope, typed, int(bits) if typed else None)
+    out = sweep(qmodel, jnp.asarray(h_test), jnp.asarray(y_test),
+                p_chunks, tkeys)
+    out = out.reshape(n_chunks * chunk, n_trials)[:n_p]
+    return np.asarray(out)                      # the single host transfer
+
+
 def evaluate_under_flips(model, kind: Optional[str], bits: int, p: float,
                          predict_encoded: Optional[Callable],
                          h_test: jax.Array, y_test: jax.Array,
@@ -83,31 +236,17 @@ def evaluate_under_flips(model, kind: Optional[str], bits: int, p: float,
                          scope: str = "all") -> float:
     """Mean test accuracy over `n_trials` independent flip draws.
 
+    Thin wrapper over ``sweep_under_flips`` with a single-point p-grid: the
+    trial keys and per-leaf mask streams are identical, so a sweep row and a
+    loop of single-p calls with the same key agree exactly.
+
     Typed models: ``evaluate_under_flips(model, None, bits, p, None, ...)``
     (or keyword-only).  Legacy dicts additionally need `kind` and a
     ``predict_encoded(model_dict, h)`` function.
     """
-    if _is_typed(model):
-        qmodel = model.quantized(bits)
-        pred = (predict_encoded if predict_encoded is not None
-                else type(model).predict_encoded)
-        corrupt = lambda m, sub: m.corrupted(p, sub, scope)
-        mat = lambda m: m.materialized()
-    else:
-        if kind is None or predict_encoded is None:
-            raise ValueError("legacy dict models need `kind` and "
-                             "`predict_encoded`")
-        qmodel = quantize_stored(model, kind, bits)
-        pred = predict_encoded
-        corrupt = lambda m, sub: corrupt_model(m, p, sub, scope=scope)
-        mat = materialize
-    pred_jit = jit_predict(pred)
-    accs = []
-    for _ in range(n_trials):
-        key, sub = jax.random.split(key)
-        corrupted = corrupt(qmodel, sub) if p > 0 else qmodel
-        preds = pred_jit(mat(corrupted), h_test)
-        accs.append(float(jnp.mean(preds == y_test)))
+    accs = sweep_under_flips(model, bits, [p], h_test, y_test, key,
+                             n_trials=n_trials, scope=scope, kind=kind,
+                             predict_encoded=predict_encoded)
     return float(np.mean(accs))
 
 
@@ -115,3 +254,10 @@ def accuracy(predict_encoded: Callable, model, h_test: jax.Array,
              y_test: jax.Array) -> float:
     preds = jit_predict(predict_encoded)(model, h_test)
     return float(jnp.mean(preds == y_test))
+
+
+def clear_caches() -> None:
+    """Drop all cached compiled predict/sweep executables (tests, long
+    notebook sessions)."""
+    _PREDICT_JIT_CACHE.clear()
+    _SWEEP_JIT_CACHE.clear()

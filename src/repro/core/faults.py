@@ -11,7 +11,15 @@ Two representations are supported:
     element flips independently — exact stored-bit semantics.
   * float32 tensors: flips on the IEEE-754 bit pattern via bitcast.
 
-All randomness is threefry (jax.random), so experiments are reproducible.
+Mask generation is *packed*: one bernoulli plane per bit position is drawn
+and OR-ed into a single b-bit word mask, so the transient footprint is
+O(|codes|) per step instead of the historical `shape + (bits,)` expansion
+(an 8x blowup for int codes, 32x for f32 leaves).  The flip probability `p`
+may be a traced scalar, which is what lets the fault-sweep engine
+(core.evaluate.sweep_under_flips) map the whole p-grid inside one jit.
+
+All randomness is threefry (jax.random), so experiments are reproducible:
+the mask for a given (key, p, shape, bits) is a pure function of its inputs.
 """
 
 from __future__ import annotations
@@ -22,7 +30,30 @@ import jax.numpy as jnp
 from repro.core.quantize import QTensor
 
 
-def flip_bits_int(q: QTensor, p: float, key: jax.Array) -> QTensor:
+def bit_plane_keys(key: jax.Array, nbits: int) -> jax.Array:
+    """Per-bit-position subkeys for a packed mask draw (split order is part
+    of the reproducibility contract; tests pin packed vs expanded parity)."""
+    return jax.random.split(key, nbits)
+
+
+def packed_flip_mask(key: jax.Array, p, shape, nbits: int,
+                     dtype=jnp.uint8) -> jax.Array:
+    """Random nbits-bit flip mask: bit i of every word set w.p. p.
+
+    Draws one bernoulli plane per bit position and ORs it into the packed
+    word, so peak transient memory is O(prod(shape)) — no trailing (nbits,)
+    axis is ever materialized.  `p` may be a python float or a traced
+    scalar.
+    """
+    keys = bit_plane_keys(key, nbits)
+    mask = jnp.zeros(shape, dtype)
+    for i in range(nbits):
+        plane = jax.random.bernoulli(keys[i], p, shape)
+        mask = mask | (plane.astype(dtype) << dtype(i))
+    return mask
+
+
+def flip_bits_int(q: QTensor, p, key: jax.Array) -> QTensor:
     """Flip each of the b stored bits of every code independently w.p. p.
 
     Codes are interpreted as b-bit two's-complement words: we XOR a random
@@ -31,10 +62,7 @@ def flip_bits_int(q: QTensor, p: float, key: jax.Array) -> QTensor:
     """
     b = q.bits
     u = q.codes.astype(jnp.uint8) & jnp.uint8((1 << b) - 1)
-    flips = jax.random.bernoulli(key, p, q.codes.shape + (b,))
-    weights = (2 ** jnp.arange(b, dtype=jnp.uint8))
-    mask = jnp.sum(flips.astype(jnp.uint8) * weights, axis=-1).astype(jnp.uint8)
-    u = u ^ mask
+    u = u ^ packed_flip_mask(key, p, q.codes.shape, b, jnp.uint8)
     if b == 1:
         return QTensor(u.astype(jnp.int8), q.scale, 1)
     # sign-extend b-bit word back to int8
@@ -43,16 +71,14 @@ def flip_bits_int(q: QTensor, p: float, key: jax.Array) -> QTensor:
     return QTensor(ext.astype(jnp.int8), q.scale, b)
 
 
-def flip_bits_f32(w: jax.Array, p: float, key: jax.Array) -> jax.Array:
+def flip_bits_f32(w: jax.Array, p, key: jax.Array) -> jax.Array:
     """Flip each of the 32 IEEE-754 bits independently w.p. p."""
     u = jax.lax.bitcast_convert_type(w.astype(jnp.float32), jnp.uint32)
-    flips = jax.random.bernoulli(key, p, w.shape + (32,))
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    mask = jnp.sum(flips.astype(jnp.uint32) * weights, axis=-1)
+    mask = packed_flip_mask(key, p, w.shape, 32, jnp.uint32)
     return jax.lax.bitcast_convert_type(u ^ mask, jnp.float32)
 
 
-def flip_tree(tree, p: float, key: jax.Array, *, skip=()):
+def flip_tree(tree, p, key: jax.Array, *, skip=()):
     """Inject flips into every stored leaf of a model pytree.
 
     QTensor leaves get integer-code flips; float leaves get IEEE flips;
@@ -68,8 +94,7 @@ def flip_tree(tree, p: float, key: jax.Array, *, skip=()):
         last = path[-1]
         return getattr(last, "key", None)
 
-    out = {}
-    flat, treedef = jax.tree_util.tree_flatten(
+    _, treedef = jax.tree_util.tree_flatten(
         tree, is_leaf=lambda x: isinstance(x, QTensor))
     new_leaves = []
     for i, (path, leaf) in enumerate(leaves_with_paths):
@@ -90,7 +115,19 @@ def flip_tree(tree, p: float, key: jax.Array, *, skip=()):
 STRUCTURAL_LEAVES = ("keep", "codebook", "proj", "bias", "enc")
 
 
-def corrupt_model(model: dict, p: float, key: jax.Array,
+def fault_skip_set(scope: str) -> tuple:
+    """Leaf names protected from flips under `scope` — the single source of
+    truth shared by the jnp path (corrupt_model) and the fused kernel path
+    (api.dispatch.corrupt_materialize)."""
+    skip = ("keep", "codebook")
+    if scope == "hv":
+        return skip + ("profiles", "sigma_inv")
+    if scope != "all":
+        raise ValueError(f"unknown fault scope: {scope}")
+    return skip
+
+
+def corrupt_model(model: dict, p, key: jax.Array,
                   scope: str = "all") -> dict:
     """Flip bits in the stored parts of a classifier model.
 
@@ -107,11 +144,7 @@ def corrupt_model(model: dict, p: float, key: jax.Array,
               mechanism (D-preservation averages flip noise in the
               similarity sums).
     """
-    skip = ("keep", "codebook")
-    if scope == "hv":
-        skip = skip + ("profiles", "sigma_inv")
-    elif scope != "all":
-        raise ValueError(f"unknown fault scope: {scope}")
+    skip = fault_skip_set(scope)
     enc = model.get("enc")
     rest = {k: v for k, v in model.items() if k != "enc"}
     rest = flip_tree(rest, p, key, skip=skip)

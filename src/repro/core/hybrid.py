@@ -20,9 +20,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.loghd import LogHDConfig, fit_loghd
+from repro.core.loghd import LogHDConfig, _fit_loghd
 from repro.core.profiles import decode_profiles, estimate_profiles
 from repro.core.sparsehd import dimension_saliency
+from repro.deprecation import warn_dict_api
 from repro.hdc.encoders import EncoderConfig, encode, encode_batched
 
 
@@ -37,12 +38,12 @@ def _l2n(v, axis=-1, eps=1e-12):
     return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
 
 
-def fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
-               y: jax.Array, *, base: Optional[dict] = None,
-               encoded: Optional[jax.Array] = None) -> dict:
+def _fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
+                y: jax.Array, *, base: Optional[dict] = None,
+                encoded: Optional[jax.Array] = None) -> dict:
     """Returns {enc, bundles (n, D'), profiles (C, n), keep (D',), codebook}."""
     if base is None:
-        base = fit_loghd(cfg.loghd, enc_cfg, x, y, encoded=encoded)
+        base = _fit_loghd(cfg.loghd, enc_cfg, x, y, encoded=encoded)
     h = (encode_batched(base["enc"], x, enc_cfg.kind)
          if encoded is None else encoded)
 
@@ -59,19 +60,44 @@ def fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
             "keep": keep, "codebook": base["codebook"]}
 
 
-def predict_hybrid(model: dict, x: jax.Array, kind: str = "cos",
-                   metric: str = "l2") -> jax.Array:
+def _predict_hybrid(model: dict, x: jax.Array, kind: str = "cos",
+                    metric: str = "l2") -> jax.Array:
     h = encode(model["enc"], x, kind)
     h_s = _l2n(h[:, model["keep"]])
     acts = h_s @ _l2n(model["bundles"]).T
     return decode_profiles(model["profiles"], acts, metric)
 
 
-def predict_hybrid_encoded(model: dict, h: jax.Array,
-                           metric: str = "l2") -> jax.Array:
+def _predict_hybrid_encoded(model: dict, h: jax.Array,
+                            metric: str = "l2") -> jax.Array:
     h_s = _l2n(h[:, model["keep"]])
     acts = h_s @ _l2n(model["bundles"]).T
     return decode_profiles(model["profiles"], acts, metric)
+
+
+# ------------------------------------------------ deprecated dict surface --
+
+def fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
+               y: jax.Array, **kw) -> dict:
+    """DEPRECATED raw-dict trainer; use
+    ``repro.api.make_classifier("hybrid", ...).fit(...)``."""
+    warn_dict_api("fit_hybrid", "repro.api.make_classifier('hybrid', ...)")
+    return _fit_hybrid(cfg, enc_cfg, x, y, **kw)
+
+
+def predict_hybrid(model: dict, x: jax.Array, kind: str = "cos",
+                   metric: str = "l2") -> jax.Array:
+    """DEPRECATED raw-dict predict; use ``HybridModel.predict``."""
+    warn_dict_api("predict_hybrid", "repro.api.HybridModel.predict")
+    return _predict_hybrid(model, x, kind, metric)
+
+
+def predict_hybrid_encoded(model: dict, h: jax.Array,
+                           metric: str = "l2") -> jax.Array:
+    """DEPRECATED raw-dict predict; use ``HybridModel.predict_encoded``."""
+    warn_dict_api("predict_hybrid_encoded",
+                  "repro.api.HybridModel.predict_encoded")
+    return _predict_hybrid_encoded(model, h, metric)
 
 
 def hybrid_memory_bits(model: dict, bits: int) -> int:

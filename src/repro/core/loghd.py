@@ -35,6 +35,7 @@ import numpy as np
 from repro.core import codebook as cb
 from repro.core.bundling import build_bundles, refine_bundles
 from repro.core.profiles import activations, decode_profiles, estimate_profiles
+from repro.deprecation import warn_dict_api
 from repro.hdc.conventional import class_prototypes
 from repro.hdc.encoders import EncoderConfig, encode, encode_batched, init_encoder
 
@@ -96,10 +97,10 @@ def max_bundles_for_budget(budget_fraction: float, n_classes: int, dim: int,
     return n
 
 
-def fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
-              y: jax.Array, *, prototypes: Optional[jax.Array] = None,
-              enc: Optional[dict] = None,
-              encoded: Optional[jax.Array] = None) -> dict:
+def _fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
+               y: jax.Array, *, prototypes: Optional[jax.Array] = None,
+               enc: Optional[dict] = None,
+               encoded: Optional[jax.Array] = None) -> dict:
     """Train a LogHD model.  Returns a pytree:
        {enc, bundles (n,D), profiles (C,n), codebook (C,n) int32,
         sigma_inv (n,n)}.
@@ -136,19 +137,44 @@ def fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
             "codebook": book_j, "sigma_inv": jnp.linalg.inv(sigma)}
 
 
-def predict_loghd(model: dict, x: jax.Array, kind: str = "cos",
-                  metric: str = "l2") -> jax.Array:
+def _predict_loghd(model: dict, x: jax.Array, kind: str = "cos",
+                   metric: str = "l2") -> jax.Array:
     h = encode(model["enc"], x, kind)
     acts = activations(model["bundles"], h)
     return decode_profiles(model["profiles"], acts, metric,
                            sigma_inv=model.get("sigma_inv"))
 
 
-def predict_loghd_encoded(model: dict, h: jax.Array,
-                          metric: str = "l2") -> jax.Array:
+def _predict_loghd_encoded(model: dict, h: jax.Array,
+                           metric: str = "l2") -> jax.Array:
     acts = activations(model["bundles"], h)
     return decode_profiles(model["profiles"], acts, metric,
                            sigma_inv=model.get("sigma_inv"))
+
+
+# ------------------------------------------------ deprecated dict surface --
+
+def fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
+              y: jax.Array, **kw) -> dict:
+    """DEPRECATED raw-dict trainer; use
+    ``repro.api.make_classifier("loghd", ...).fit(...)``."""
+    warn_dict_api("fit_loghd", "repro.api.make_classifier('loghd', ...)")
+    return _fit_loghd(cfg, enc_cfg, x, y, **kw)
+
+
+def predict_loghd(model: dict, x: jax.Array, kind: str = "cos",
+                  metric: str = "l2") -> jax.Array:
+    """DEPRECATED raw-dict predict; use ``LogHDModel.predict``."""
+    warn_dict_api("predict_loghd", "repro.api.LogHDModel.predict")
+    return _predict_loghd(model, x, kind, metric)
+
+
+def predict_loghd_encoded(model: dict, h: jax.Array,
+                          metric: str = "l2") -> jax.Array:
+    """DEPRECATED raw-dict predict; use ``LogHDModel.predict_encoded``."""
+    warn_dict_api("predict_loghd_encoded",
+                  "repro.api.LogHDModel.predict_encoded")
+    return _predict_loghd_encoded(model, h, metric)
 
 
 def loghd_model_bits(model: dict, bits: int) -> int:

@@ -28,6 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.deprecation import warn_dict_api
 from repro.hdc.conventional import class_prototypes
 from repro.hdc.encoders import EncoderConfig, encode, encode_batched, init_encoder
 
@@ -91,10 +92,10 @@ def _retrain_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
     return protos
 
 
-def fit_sparsehd(cfg: SparseHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
-                 y: jax.Array, *, prototypes: Optional[jax.Array] = None,
-                 enc: Optional[dict] = None,
-                 encoded: Optional[jax.Array] = None) -> dict:
+def _fit_sparsehd(cfg: SparseHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
+                  y: jax.Array, *, prototypes: Optional[jax.Array] = None,
+                  enc: Optional[dict] = None,
+                  encoded: Optional[jax.Array] = None) -> dict:
     """Returns {enc, protos (C, D'), keep (D',) int32}."""
     if enc is None or encoded is None:
         from repro.hdc.encoders import fit_encoder
@@ -111,15 +112,42 @@ def fit_sparsehd(cfg: SparseHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
     return {"enc": enc, "protos": protos_s, "keep": keep}
 
 
-def predict_sparsehd(model: dict, x: jax.Array, kind: str = "cos") -> jax.Array:
+def _predict_sparsehd(model: dict, x: jax.Array,
+                      kind: str = "cos") -> jax.Array:
     h = encode(model["enc"], x, kind)
     h_s = _l2n(h[:, model["keep"]])
     return jnp.argmax(h_s @ _l2n(model["protos"]).T, axis=-1)
 
 
-def predict_sparsehd_encoded(model: dict, h: jax.Array) -> jax.Array:
+def _predict_sparsehd_encoded(model: dict, h: jax.Array) -> jax.Array:
     h_s = _l2n(h[:, model["keep"]])
     return jnp.argmax(h_s @ _l2n(model["protos"]).T, axis=-1)
+
+
+# ------------------------------------------------ deprecated dict surface --
+
+def fit_sparsehd(cfg: SparseHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
+                 y: jax.Array, **kw) -> dict:
+    """DEPRECATED raw-dict trainer; use
+    ``repro.api.make_classifier("sparsehd", ...).fit(...)``."""
+    warn_dict_api("fit_sparsehd",
+                  "repro.api.make_classifier('sparsehd', ...)")
+    return _fit_sparsehd(cfg, enc_cfg, x, y, **kw)
+
+
+def predict_sparsehd(model: dict, x: jax.Array,
+                     kind: str = "cos") -> jax.Array:
+    """DEPRECATED raw-dict predict; use ``SparseHDModel.predict``."""
+    warn_dict_api("predict_sparsehd", "repro.api.SparseHDModel.predict")
+    return _predict_sparsehd(model, x, kind)
+
+
+def predict_sparsehd_encoded(model: dict, h: jax.Array) -> jax.Array:
+    """DEPRECATED raw-dict predict; use
+    ``SparseHDModel.predict_encoded``."""
+    warn_dict_api("predict_sparsehd_encoded",
+                  "repro.api.SparseHDModel.predict_encoded")
+    return _predict_sparsehd_encoded(model, h)
 
 
 def sparsehd_memory_bits(model: dict, bits: int) -> int:

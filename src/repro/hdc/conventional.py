@@ -14,6 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.deprecation import warn_dict_api
 from repro.hdc.encoders import EncoderConfig, encode, init_encoder
 
 
@@ -66,9 +67,9 @@ def _refine_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
     return protos
 
 
-def fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
-                     x: jax.Array, y: jax.Array, *, enc=None,
-                     encoded=None) -> dict:
+def _fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
+                      x: jax.Array, y: jax.Array, *, enc=None,
+                      encoded=None) -> dict:
     """Train the baseline model.  Returns {enc, protos} pytree."""
     if enc is None or encoded is None:
         from repro.hdc.encoders import fit_encoder
@@ -81,10 +82,30 @@ def fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
     return {"enc": enc, "protos": protos}
 
 
-def predict_conventional(model: dict, x: jax.Array, kind: str = "cos") -> jax.Array:
+def _predict_conventional(model: dict, x: jax.Array,
+                          kind: str = "cos") -> jax.Array:
     h = encode(model["enc"], x, kind)
     protos = _l2n(model["protos"])
     return jnp.argmax(h @ protos.T, axis=-1)
+
+
+# ------------------------------------------------ deprecated dict surface --
+
+def fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
+                     x: jax.Array, y: jax.Array, **kw) -> dict:
+    """DEPRECATED raw-dict trainer; use
+    ``repro.api.make_classifier("conventional", ...).fit(...)``."""
+    warn_dict_api("fit_conventional",
+                  "repro.api.make_classifier('conventional', ...)")
+    return _fit_conventional(cfg, enc_cfg, x, y, **kw)
+
+
+def predict_conventional(model: dict, x: jax.Array,
+                         kind: str = "cos") -> jax.Array:
+    """DEPRECATED raw-dict predict; use ``ConventionalModel.predict``."""
+    warn_dict_api("predict_conventional",
+                  "repro.api.ConventionalModel.predict")
+    return _predict_conventional(model, x, kind)
 
 
 def predict_from_encoded(protos: jax.Array, h: jax.Array) -> jax.Array:

@@ -1,0 +1,2 @@
+from repro.kernels.flip_corrupt.ops import flip_corrupt
+from repro.kernels.flip_corrupt.ref import flip_corrupt_ref

@@ -1,0 +1,50 @@
+"""Public jit'd wrapper for the flip_corrupt Pallas kernel.
+
+Flattens a QTensor's codes to 2D, zero-pads to hardware-aligned tiles
+(padded elements are corrupted garbage and sliced away; their hash indices
+may alias real elements', which is harmless since each output depends only
+on its own index), and dispatches the fused corrupt+dequantize kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flip_corrupt.flip_corrupt import flip_corrupt_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r", "block_c",
+                                             "interpret", "use_pltpu_prng"))
+def flip_corrupt(codes: jax.Array, scale: jax.Array, bits: int, p, seed, *,
+                 block_r: int = 256, block_c: int = 1024,
+                 interpret: bool | None = None,
+                 use_pltpu_prng: bool | None = None) -> jax.Array:
+    """Fused flip->sign-extend->dequantize of b-bit integer codes.
+
+    codes: (..., C) int8 with `bits` significant bits; scale: f32 scalar;
+    p: flip probability (python float or traced scalar); seed: int32 scalar
+    (python int or traced).  Returns f32 of codes.shape.
+    """
+    if interpret is None:
+        interpret = common.INTERPRET
+    if use_pltpu_prng is None:
+        use_pltpu_prng = not interpret
+    shape = codes.shape
+    c2 = codes.reshape((-1, shape[-1])) if codes.ndim > 1 else \
+        codes.reshape((1, -1))
+    r, c = c2.shape
+    block_r = min(block_r, common.round_up(r, 32))
+    block_c = min(block_c, common.round_up(c, 128))
+    cp = common.pad_axis(common.pad_axis(c2, 0, block_r), 1, block_c)
+    p_arr = jnp.asarray(p, jnp.float32).reshape((1,))
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape((1,))
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape((1,))
+    out = flip_corrupt_pallas(cp, scale_arr, p_arr, seed_arr, bits=bits,
+                              true_c=c, block_r=block_r, block_c=block_c,
+                              use_pltpu_prng=use_pltpu_prng,
+                              interpret=interpret)
+    return out[:r, :c].reshape(shape)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the flip_corrupt kernel.
+
+Reproduces the kernel's portable counter-hash PRNG path bit-for-bit: the
+same hash over (global element index, seed, bit plane), the same 24-bit
+threshold, the same XOR / sign-extend / dequantize arithmetic.  Because the
+kernel's hash indices are global (row * C + col over the *unpadded* column
+count), the oracle is independent of the kernel's block decomposition — the
+parity tests sweep block shapes against this one function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flip_corrupt.flip_corrupt import flip_threshold, hash_u32
+
+
+def flip_corrupt_ref(codes: jax.Array, scale: jax.Array, p, seed,
+                     *, bits: int) -> jax.Array:
+    """codes (..., C) int8 -> corrupted dequantized f32 of the same shape."""
+    shape = codes.shape
+    c2 = codes.reshape((-1, shape[-1])) if codes.ndim > 1 else \
+        codes.reshape((1, -1))
+    r, c = c2.shape
+    thr = flip_threshold(jnp.asarray(p, jnp.float32))
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (r, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (r, c), 1)
+    idx = rows * jnp.uint32(c) + cols
+    seed_u = jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+
+    u = c2.astype(jnp.int32) & ((1 << bits) - 1)
+    mask = jnp.zeros((r, c), jnp.int32)
+    for b in range(bits):
+        rnd = hash_u32(idx, seed_u, b)
+        flip = (rnd >> jnp.uint32(8)) < thr
+        mask = mask | (flip.astype(jnp.int32) << b)
+
+    x = u ^ mask
+    if bits == 1:
+        val = (2 * x - 1).astype(jnp.float32)
+    else:
+        x = jnp.where((x & (1 << (bits - 1))) != 0, x - (1 << bits), x)
+        val = x.astype(jnp.float32)
+    return (val * jnp.asarray(scale, jnp.float32)).reshape(shape)

@@ -21,6 +21,11 @@ from repro.core.loghd import fit_loghd, predict_loghd_encoded
 from repro.core.quantize import QTensor
 from repro.hdc.encoders import EncoderConfig, encode_batched
 
+# the dict-parity tests here deliberately drive the deprecated raw-dict
+# backend against the typed path
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.deprecation.DictAPIDeprecationWarning")
+
 C, F, D = 6, 16, 512
 
 METHOD_KW = {

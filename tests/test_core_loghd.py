@@ -16,6 +16,10 @@ from repro.core.profiles import (activations, decode_profiles,
                                  estimate_profiles)
 from repro.core.quantize import QTensor, dequantize, quantize
 
+# parts of this module deliberately exercise the deprecated raw-dict backend
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.deprecation.DictAPIDeprecationWarning")
+
 
 # ------------------------------------------------------------- codebook ---
 

@@ -1,0 +1,273 @@
+"""Fault-sweep engine + packed-mask tests.
+
+Covers the PR-4 tentpole surface:
+  * bit-exact parity of the packed mask generator vs the per-bit expansion
+    at fixed per-plane keys,
+  * flip-rate chi-squared sanity for the packed masks,
+  * exact (key-for-key) agreement of ``sweep_under_flips`` with a per-trial
+    eager loop over the same keys, plus a statistical CI check across
+    independent keys,
+  * chunked vs full-vmap sweep invariance,
+  * dict-API deprecation step 1: the raw-dict wrappers warn, the typed
+    path and the benchmark modules never do.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import make_classifier
+from repro.core import evaluate as ev
+from repro.core.faults import (bit_plane_keys, corrupt_model, flip_bits_f32,
+                               flip_bits_int, packed_flip_mask)
+from repro.core.quantize import QTensor, quantize
+from repro.deprecation import DictAPIDeprecationWarning
+from repro.hdc.encoders import encode_batched
+
+C, F, D = 6, 16, 512
+
+
+def _fitted(name="loghd", **kw):
+    key = jax.random.PRNGKey(0)
+    dirs = jax.random.normal(key, (C, F))
+    y = jnp.repeat(jnp.arange(C), 30)
+    x = dirs[y] * 2.0 + jax.random.normal(key, (len(y), F)) * 0.3
+    kw = kw or dict(k=2, extra_bundles=2, refine_epochs=3)
+    clf = make_classifier(name, n_classes=C, in_features=F, dim=D,
+                          **kw).fit(x, y)
+    h = encode_batched(clf.model.enc, x, clf.enc_cfg.kind)
+    return clf, h, y
+
+
+# ------------------------------------------------------------ packed mask --
+
+@pytest.mark.parametrize("bits,dtype", [(1, jnp.uint8), (4, jnp.uint8),
+                                        (8, jnp.uint8), (32, jnp.uint32)])
+def test_packed_mask_matches_per_bit_expansion(bits, dtype):
+    """The packed generator must equal the historical trailing-axis
+    expansion computed from the same per-plane keys, bit for bit."""
+    key = jax.random.PRNGKey(42)
+    shape = (33, 129)
+    p = 0.23
+    packed = packed_flip_mask(key, p, shape, bits, dtype)
+    keys = bit_plane_keys(key, bits)
+    planes = jnp.stack([jax.random.bernoulli(keys[i], p, shape)
+                        for i in range(bits)], axis=-1)          # + (bits,)
+    weights = (jnp.ones((), dtype) << jnp.arange(bits, dtype=dtype))
+    expanded = jnp.sum(planes.astype(dtype) * weights, axis=-1, dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(expanded))
+
+
+def test_packed_mask_p_endpoints():
+    key = jax.random.PRNGKey(0)
+    z = packed_flip_mask(key, 0.0, (8, 16), 4)
+    assert not np.any(np.asarray(z))
+    f = packed_flip_mask(key, 1.0, (8, 16), 4)
+    np.testing.assert_array_equal(np.asarray(f), 0xF)
+
+
+def test_flip_bits_identity_and_traced_p():
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 50))
+    q = quantize(w, 4)
+    fq = flip_bits_int(q, 0.0, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(q.codes), np.asarray(fq.codes))
+    np.testing.assert_array_equal(
+        np.asarray(w), np.asarray(flip_bits_f32(w, 0.0, jax.random.PRNGKey(3))))
+    # p may be traced (the sweep engine maps the p-grid inside one jit)
+    out = jax.jit(lambda p: flip_bits_int(q, p, jax.random.PRNGKey(4)).codes)(
+        jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(q.codes), np.asarray(out))
+
+
+def test_flip_rate_chi_squared():
+    """Per-bit-plane flip counts must be consistent with Binomial(N, p)."""
+    p, bits = 0.25, 4
+    w = jax.random.normal(jax.random.PRNGKey(5), (128, 512))
+    q = quantize(w, bits)
+    n = q.codes.size
+    fq = flip_bits_int(q, p, jax.random.PRNGKey(6))
+    x = (np.asarray(q.codes, np.int64) ^ np.asarray(fq.codes, np.int64))
+    chi2 = 0.0
+    for b in range(bits):
+        k = int(((x >> b) & 1).sum())
+        chi2 += (k - n * p) ** 2 / (n * p * (1 - p))
+    # chi2 ~ ChiSq(df=4); P[chi2 > 23.5] ~ 1e-4
+    assert chi2 < 23.5, chi2
+    # f32 path too (32 planes)
+    wf = flip_bits_f32(w, p, jax.random.PRNGKey(7))
+    uw = np.asarray(jax.lax.bitcast_convert_type(w, jnp.uint32), np.int64)
+    uf = np.asarray(jax.lax.bitcast_convert_type(wf, jnp.uint32), np.int64)
+    rate = np.unpackbits((uw ^ uf).astype(np.uint32).view(np.uint8)).sum() \
+        / (w.size * 32)
+    assert abs(rate - p) < 0.005, rate
+
+
+# ----------------------------------------------------------- sweep engine --
+
+def test_sweep_matches_per_trial_loop_exactly():
+    """Same trial keys + same per-leaf streams => the sweep matrix equals an
+    eager per-(p, trial) loop bit for bit (accuracy is a deterministic
+    function of the masks)."""
+    clf, h, y = _fitted()
+    key = jax.random.PRNGKey(11)
+    p_grid = [0.0, 0.05, 0.2]
+    n_trials = 3
+    accs = ev.sweep_under_flips(clf.model, 2, p_grid, h, y, key,
+                                n_trials=n_trials)
+    assert accs.shape == (len(p_grid), n_trials)
+
+    qmodel = clf.model.quantized(2)
+    tkeys = ev.trial_keys(key, n_trials)
+    for i, p in enumerate(p_grid):
+        for t in range(n_trials):
+            m = qmodel.corrupted(p, tkeys[t], "all").materialized()
+            acc = float(jnp.mean(type(m).predict_encoded(m, h) == y))
+            assert abs(acc - accs[i, t]) < 1e-6, (p, t, acc, accs[i, t])
+
+
+def test_evaluate_under_flips_is_sweep_row():
+    clf, h, y = _fitted()
+    key = jax.random.PRNGKey(12)
+    accs = ev.sweep_under_flips(clf.model, 4, [0.1], h, y, key, n_trials=4)
+    e = ev.evaluate_under_flips(clf.model, None, 4, 0.1, None, h, y, key, 4)
+    assert abs(e - float(accs.mean())) < 1e-6
+    # key-for-key reproducible
+    e2 = ev.evaluate_under_flips(clf.model, None, 4, 0.1, None, h, y, key, 4)
+    assert e == e2
+
+
+def test_sweep_chunking_invariance():
+    clf, h, y = _fitted()
+    key = jax.random.PRNGKey(13)
+    p_grid = [0.0, 0.02, 0.1, 0.2, 0.3]
+    full = ev.sweep_under_flips(clf.model, 4, p_grid, h, y, key, n_trials=2)
+    for chunk in (1, 2, 3, 5):
+        out = ev.sweep_under_flips(clf.model, 4, p_grid, h, y, key,
+                                   n_trials=2, p_chunk=chunk)
+        np.testing.assert_array_equal(full, out)
+
+
+def test_sweep_statistical_ci_vs_independent_loop():
+    """Across independent keys, the sweep's mean accuracy at a mid p must
+    sit inside a generous CI of per-trial loop estimates — the two draw
+    different mask streams, so this is the distribution-level contract."""
+    clf, h, y = _fitted()
+    p, bits, n = 0.15, 2, 8
+    a = ev.sweep_under_flips(clf.model, bits, [p], h, y,
+                             jax.random.PRNGKey(21), n_trials=n)[0]
+    b = ev.sweep_under_flips(clf.model, bits, [p], h, y,
+                             jax.random.PRNGKey(22), n_trials=n)[0]
+    se = np.sqrt((a.var() + b.var()) / n + 1e-12)
+    assert abs(a.mean() - b.mean()) <= max(5 * se, 0.05), (a, b)
+
+
+def test_sweep_under_flips_dict_path_matches_typed():
+    """The deprecated dict path runs through the same engine and must agree
+    with the typed path exactly (same masks, same predict math)."""
+    from repro.core.loghd import _predict_loghd_encoded
+    clf, h, y = _fitted()
+    key = jax.random.PRNGKey(14)
+    typed = ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key,
+                                 n_trials=2)
+    d = clf.model.to_dict()
+    dict_accs = ev.sweep_under_flips(
+        d, 4, [0.0, 0.1], h, y, key, n_trials=2, kind="loghd",
+        predict_encoded=lambda m, hh: _predict_loghd_encoded(m, hh, "l2"))
+    np.testing.assert_allclose(typed, dict_accs, atol=1e-6)
+
+
+def test_sweep_validates_args():
+    clf, h, y = _fitted()
+    with pytest.raises(ValueError):
+        ev.sweep_under_flips(clf.model.to_dict(), 4, [0.1], h, y,
+                             jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ev.sweep_under_flips(clf.model, 4, [0.1], h, y,
+                             jax.random.PRNGKey(0), n_trials=0)
+
+
+@pytest.mark.parametrize("scope", ["all", "hv"])
+def test_corrupt_materialize_kernel_path_fully_materializes(scope):
+    """The fused-kernel corrupt path (forced on, interpret kernel) must
+    return a fully dequantized model in BOTH scopes — protected QTensor
+    leaves (hv-scope profiles) materialize too — and its p=0 output must
+    equal the jnp path's."""
+    from repro.api.dispatch import corrupt_materialize
+    clf, h, y = _fitted()
+    qm = clf.model.quantized(4)
+    key = jax.random.PRNGKey(17)
+    m = corrupt_materialize(qm, 0.1, key, scope, use_kernel=True)
+    for name in m.stored_leaves:
+        assert not isinstance(getattr(m, name), QTensor), (scope, name)
+    m.predict_encoded(h)                           # must not crash
+    clean_kernel = corrupt_materialize(qm, 0.0, key, scope, use_kernel=True)
+    clean_jnp = corrupt_materialize(qm, 0.0, key, scope, use_kernel=False)
+    for name in m.stored_leaves:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(clean_kernel, name)),
+            np.asarray(getattr(clean_jnp, name)))
+
+
+# ------------------------------------------------------------ deprecation --
+
+def test_dict_api_wrappers_warn():
+    from repro.core import evaluate as evmod
+    from repro.core.hybrid import predict_hybrid_encoded
+    from repro.core.loghd import predict_loghd_encoded
+    from repro.core.sparsehd import predict_sparsehd_encoded
+    clf, h, y = _fitted()
+    d = clf.model.to_dict()
+    with pytest.warns(DictAPIDeprecationWarning):
+        evmod.quantize_stored(d, "loghd", 4)
+    with pytest.warns(DictAPIDeprecationWarning):
+        _ = evmod.STORED_LEAVES
+    with pytest.warns(DictAPIDeprecationWarning):
+        predict_loghd_encoded(d, h)
+    sp, hh, _ = _fitted("sparsehd", sparsity=0.5, retrain_epochs=2)
+    with pytest.warns(DictAPIDeprecationWarning):
+        predict_sparsehd_encoded(sp.model.to_dict(), hh)
+    hy, hh2, _ = _fitted("hybrid", sparsity=0.5, k=2, extra_bundles=2,
+                         refine_epochs=2)
+    with pytest.warns(DictAPIDeprecationWarning):
+        predict_hybrid_encoded(hy.model.to_dict(), hh2)
+
+
+def test_deprecated_fit_wrappers_warn():
+    from repro.core.loghd import LogHDConfig, fit_loghd
+    key = jax.random.PRNGKey(0)
+    y = jnp.repeat(jnp.arange(C), 10)
+    x = jax.random.normal(key, (len(y), F))
+    from repro.hdc.encoders import EncoderConfig
+    cfg = LogHDConfig(n_classes=C, k=2, extra_bundles=1, refine_epochs=0)
+    with pytest.warns(DictAPIDeprecationWarning):
+        fit_loghd(cfg, EncoderConfig(F, 128, "cos"), x, y)
+
+
+def test_typed_path_triggers_no_dict_deprecations():
+    """The in-repo hot path — typed fit, predict, sweep — must be silent:
+    step 2 of the removal plan depends on it."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DictAPIDeprecationWarning)
+        clf, h, y = _fitted()
+        clf.predict_encoded(h)
+        clf.accuracy(h, y)
+        ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y,
+                             jax.random.PRNGKey(3), n_trials=2)
+        ev.evaluate_under_flips(clf.model, None, 2, 0.05, None, h, y,
+                                jax.random.PRNGKey(4), 1)
+        clf.model.quantized(4).corrupted(
+            0.1, jax.random.PRNGKey(5)).materialized()
+
+
+def test_benchmark_modules_import_without_dict_deprecations():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DictAPIDeprecationWarning)
+        import benchmarks.breakpoints          # noqa: F401
+        import benchmarks.fault_sweep_bench    # noqa: F401
+        import benchmarks.fig3_bitflip         # noqa: F401
+        import benchmarks.fig4_dim_quant       # noqa: F401
+        import benchmarks.fig5_alphabet        # noqa: F401
+        import benchmarks.fig6_hybrid          # noqa: F401

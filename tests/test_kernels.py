@@ -8,8 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.quantize import dequantize, quantize
 from repro.kernels.bundle_sim.ops import bundle_similarity
 from repro.kernels.bundle_sim.ref import bundle_similarity_ref
+from repro.kernels.flip_corrupt.ops import flip_corrupt
+from repro.kernels.flip_corrupt.ref import flip_corrupt_ref
 from repro.kernels.profile_decode.ops import profile_decode_scores
 from repro.kernels.profile_decode.ref import profile_decode_scores_ref
 from repro.kernels.hdc_encode.ops import hdc_encode
@@ -125,3 +128,69 @@ def test_loghd_head(b, d, n, v, dtype):
     np.testing.assert_allclose(got, want, **tol)
     if dtype == jnp.float32:
         np.testing.assert_array_equal(jnp.argmax(got, -1), jnp.argmax(want, -1))
+
+
+FC_SHAPES = [
+    (8, 256),          # tiny, single tile
+    (5, 10000),        # paper-scale bundles, ragged rows
+    (26, 617),         # ragged both axes
+    (100, 2000),       # multiple row tiles
+]
+
+
+@pytest.mark.parametrize("r,c", FC_SHAPES)
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("p", [0.0, 0.13, 1.0])
+def test_flip_corrupt_matches_ref(r, c, bits, p):
+    """Interpret-mode kernel (portable counter-hash PRNG) vs the jnp oracle:
+    bit-exact at every p, including the deterministic endpoints."""
+    w = jax.random.normal(jax.random.PRNGKey(r + c + bits), (r, c))
+    q = quantize(w, bits)
+    got = flip_corrupt(q.codes, q.scale, bits, p, 42, interpret=True)
+    want = flip_corrupt_ref(q.codes, q.scale, p, 42, bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == q.codes.shape and got.dtype == jnp.float32
+
+
+def test_flip_corrupt_p0_is_dequantize():
+    w = jax.random.normal(jax.random.PRNGKey(0), (10, 1000))
+    for bits in (1, 4):
+        q = quantize(w, bits)
+        out = flip_corrupt(q.codes, q.scale, bits, 0.0, 7, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(dequantize(q)))
+
+
+def test_flip_corrupt_block_shape_invariant():
+    """The hash PRNG indexes elements globally, so the output must not
+    depend on the block decomposition."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (33, 700))
+    q = quantize(w, 4)
+    a = flip_corrupt(q.codes, q.scale, 4, 0.3, 9, interpret=True,
+                     block_r=32, block_c=128)
+    b = flip_corrupt(q.codes, q.scale, 4, 0.3, 9, interpret=True,
+                     block_r=256, block_c=512)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flip_corrupt_flip_rate():
+    """Recovered bit-flip rate from the dequantized output ~ p."""
+    p, bits = 0.25, 4
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 4096))
+    q = quantize(w, bits)
+    out = flip_corrupt(q.codes, q.scale, bits, p, 123, interpret=True)
+    codes_out = np.round(np.asarray(out) / float(q.scale)).astype(np.int64)
+    x = ((codes_out & 0xF) ^ (np.asarray(q.codes, np.int64) & 0xF))
+    rate = np.unpackbits(x.astype(np.uint8)).sum() / (q.codes.size * bits)
+    assert abs(rate - p) < 0.01, rate
+
+
+def test_flip_corrupt_traced_p_and_seed():
+    """p and seed may be traced — the sweep engine vmaps over both."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (8, 256))
+    q = quantize(w, 2)
+    f = jax.jit(lambda p, s: flip_corrupt(q.codes, q.scale, 2, p, s,
+                                          interpret=True))
+    got = f(jnp.float32(0.13), jnp.int32(42))
+    want = flip_corrupt_ref(q.codes, q.scale, 0.13, 42, bits=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

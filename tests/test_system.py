@@ -8,6 +8,10 @@ import numpy as np
 import pytest
 
 from repro.core.evaluate import accuracy, evaluate_under_flips
+
+# this module deliberately exercises the deprecated raw-dict backend
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.deprecation.DictAPIDeprecationWarning")
 from repro.core.loghd import (LogHDConfig, fit_loghd, memory_bits,
                               predict_loghd_encoded)
 from repro.core.sparsehd import (SparseHDConfig, fit_sparsehd,
