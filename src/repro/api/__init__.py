@@ -29,6 +29,9 @@ Module map
   checkpointing.py ``save_model``/``load_model``: atomic typed-model
                    checkpoints that round-trip class, static aux fields and
                    QTensor bit widths without a caller-supplied skeleton.
+  _impl.py         The built-in families' trainers (``fit_loghd_model``
+                   etc.), composing the algorithm math in ``repro.core`` /
+                   ``repro.hdc`` into typed models behind the registry.
 
 Quick start
 -----------
@@ -40,10 +43,11 @@ Quick start
     acc = clf.accuracy(h_test, y_test)          # jit-cached predict
     noisy = clf.quantized(4).corrupted(0.1, jax.random.PRNGKey(0))
 
-The legacy ``fit_*``/``predict_*_encoded`` dict functions in ``core/`` and
-``hdc/`` remain as thin deprecated backends; new code should construct
-models through this package (see ROADMAP "Open items" for the dict-API
-removal plan).
+This package is the *only* way to fit, predict, corrupt and sweep: the
+legacy ``fit_*``/``predict_*_encoded`` raw-dict functions in ``core/`` and
+``hdc/`` were removed (deprecation step 2).  The built-in trainers live in
+``_impl.py``; migration recipes for every removed symbol are in
+``docs/migration.md``, and the full surface reference is ``docs/api.md``.
 """
 
 from repro.api.checkpointing import load_model, model_spec, save_model

@@ -1,0 +1,157 @@
+"""Fit implementations behind the method registry.
+
+One ``fit_*_model`` function per built-in classifier family, each returning
+a typed ``repro.api.models`` pytree model directly.  These are the former
+``core/{loghd,sparsehd,hybrid}._fit_*`` / ``hdc.conventional._fit_*``
+raw-dict trainers, folded into the api layer when the dict surface was
+deleted (deprecation step 2 — see docs/migration.md); the algorithm math
+they compose (codebook, bundling, profiles, saliency, OnlineHD updates)
+stays in ``repro.core`` / ``repro.hdc``.
+
+All trainers share the keyword protocol of ``MethodSpec.fit``:
+
+    fit(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
+        prototypes=None, base=None) -> HDModel
+
+``enc``/``encoded``/``prototypes``/``base`` let callers share work across
+methods — the paper trains every method from one encoder and one prototype
+set, and the hybrid trainer reuses a fitted LogHD base model.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.models import (ConventionalModel, HybridModel, LogHDModel,
+                              SparseHDModel)
+from repro.core import codebook as cb
+from repro.core.bundling import build_bundles, refine_bundles
+from repro.core.hybrid import HybridConfig
+from repro.core.loghd import LogHDConfig
+from repro.core.profiles import estimate_profiles
+from repro.core.sparsehd import (SparseHDConfig, dimension_saliency,
+                                 keep_indices)
+from repro.hdc.conventional import (ConventionalConfig, class_prototypes,
+                                    l2_normalize as _l2n, onlinehd_epoch)
+from repro.hdc.encoders import EncoderConfig, encode_batched
+
+__all__ = ["fit_conventional_model", "fit_sparsehd_model",
+           "fit_loghd_model", "fit_hybrid_model"]
+
+
+def _encoder_and_encodings(enc_cfg: EncoderConfig, x: jax.Array,
+                           enc: Optional[dict],
+                           encoded: Optional[jax.Array]
+                           ) -> Tuple[dict, jax.Array]:
+    """Fit the shared encoder unless the caller supplies one + encodings."""
+    if enc is None or encoded is None:
+        from repro.hdc.encoders import fit_encoder
+        return fit_encoder(enc_cfg, x)
+    return enc, encoded
+
+
+def fit_conventional_model(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
+                           x: jax.Array, y: jax.Array, *,
+                           enc: Optional[dict] = None,
+                           encoded: Optional[jax.Array] = None,
+                           prototypes: Optional[jax.Array] = None,
+                           base=None) -> ConventionalModel:
+    """Superpose per-class prototypes, optionally OnlineHD-refine them.
+
+    With ``prototypes`` + ``enc`` supplied and no refinement requested the
+    model is assembled directly (the shared-prototype fast path every
+    benchmark fixture uses)."""
+    if prototypes is not None and enc is not None and cfg.refine_epochs == 0:
+        return ConventionalModel(enc=enc, protos=prototypes,
+                                 encoder_kind=enc_cfg.kind)
+    enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
+    protos = class_prototypes(h, y, cfg.n_classes)
+    for _ in range(cfg.refine_epochs):
+        protos = onlinehd_epoch(protos, h, y, cfg.lr, cfg.batch_size)
+    return ConventionalModel(enc=enc, protos=protos, encoder_kind=enc_cfg.kind)
+
+
+def fit_sparsehd_model(cfg: SparseHDConfig, enc_cfg: EncoderConfig,
+                       x: jax.Array, y: jax.Array, *,
+                       enc: Optional[dict] = None,
+                       encoded: Optional[jax.Array] = None,
+                       prototypes: Optional[jax.Array] = None,
+                       base=None) -> SparseHDModel:
+    """Prune the least-salient dimensions, then retrain in the kept space."""
+    enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
+    protos = (class_prototypes(h, y, cfg.n_classes)
+              if prototypes is None else prototypes)
+    keep = keep_indices(protos, cfg.sparsity, cfg.saliency)
+    protos_s = _l2n(protos[:, keep])
+    h_s = _l2n(h[:, keep])
+    for _ in range(cfg.retrain_epochs):
+        protos_s = onlinehd_epoch(protos_s, h_s, y, cfg.lr, cfg.batch_size)
+    return SparseHDModel(enc=enc, protos=protos_s, keep=keep,
+                         encoder_kind=enc_cfg.kind)
+
+
+def fit_loghd_model(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
+                    y: jax.Array, *, enc: Optional[dict] = None,
+                    encoded: Optional[jax.Array] = None,
+                    prototypes: Optional[jax.Array] = None,
+                    base=None) -> LogHDModel:
+    """Train a LogHD model (paper Algorithm 1).
+
+    Prototypes -> capacity-aware codebook -> bundle superposition ->
+    Eq. 9 refinement -> activation-profile estimation.  ``sigma_inv``
+    (pooled within-class activation covariance inverse) supports the
+    optional Mahalanobis decode variant (Sec. III-E); the l2 default
+    ignores it."""
+    enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
+    protos = (class_prototypes(h, y, cfg.n_classes)
+              if prototypes is None else prototypes)
+
+    book = cb.build_codebook(cfg.n_classes, cfg.n_bundles, cfg.k,
+                             alpha=cfg.alpha, seed=cfg.seed,
+                             method=cfg.codebook_method)
+    book_j = jnp.asarray(book)
+    bundles = build_bundles(protos, book_j, cfg.k, bipolar=cfg.bipolar_init)
+    bundles = refine_bundles(bundles, h, y, book_j, cfg.k,
+                             epochs=cfg.refine_epochs, lr=cfg.lr,
+                             batch_size=cfg.refine_batch, seed=cfg.seed)
+    profiles = estimate_profiles(bundles, h, y, cfg.n_classes)
+
+    n = cfg.n_bundles
+    acts = h @ bundles.T
+    resid = acts - profiles[y]
+    sigma = resid.T @ resid / resid.shape[0] + 1e-6 * jnp.eye(n)
+    return LogHDModel(enc=enc, bundles=bundles, profiles=profiles,
+                      codebook=book_j, sigma_inv=jnp.linalg.inv(sigma),
+                      metric=cfg.metric, encoder_kind=enc_cfg.kind)
+
+
+def fit_hybrid_model(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
+                     y: jax.Array, *, enc: Optional[dict] = None,
+                     encoded: Optional[jax.Array] = None,
+                     prototypes: Optional[jax.Array] = None,
+                     base: Optional[LogHDModel] = None) -> HybridModel:
+    """Sparsify a LogHD base model's bundles, re-estimate its profiles.
+
+    ``base`` (a fitted ``LogHDModel``) skips retraining LogHD; otherwise
+    one is fitted from ``cfg.loghd`` first."""
+    if base is None:
+        base = fit_loghd_model(cfg.loghd, enc_cfg, x, y, enc=enc,
+                               encoded=encoded, prototypes=prototypes)
+    h = (encode_batched(base.enc, x, enc_cfg.kind)
+         if encoded is None else encoded)
+
+    d = base.bundles.shape[1]
+    n_keep = max(1, int(round((1.0 - cfg.sparsity) * d)))
+    sal = dimension_saliency(base.bundles, cfg.saliency)
+    _, idx = jax.lax.top_k(sal, n_keep)
+    keep = jnp.sort(idx)
+
+    bundles_s = _l2n(base.bundles[:, keep])
+    h_s = _l2n(h[:, keep])
+    profiles = estimate_profiles(bundles_s, h_s, y, cfg.loghd.n_classes)
+    return HybridModel(enc=base.enc, bundles=bundles_s, profiles=profiles,
+                       keep=keep, codebook=base.codebook,
+                       metric=cfg.loghd.metric, encoder_kind=enc_cfg.kind)

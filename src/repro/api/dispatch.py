@@ -43,7 +43,11 @@ def kernels_qualify(metric: str = "l2") -> bool:
     """Pallas path: compiled TPU backend and the l2 metric the kernels fuse.
 
     On CPU (this container) the kernels run in interpret mode — orders of
-    magnitude slower than XLA — so the reference path is the fast path."""
+    magnitude slower than XLA — so the reference path is the fast path.
+
+    >>> kernels_qualify("cos")        # only the l2 kernels exist
+    False
+    """
     return (not kcommon.INTERPRET) and metric == "l2"
 
 

@@ -1,36 +1,39 @@
 """Typed pytree model classes for the four classifier families.
 
-Each class replaces the raw ``{"enc": ..., "protos": ...}``-style dicts the
-fit_*/predict_* functions historically returned.  A model
+Each class is the *only* representation of a fitted classifier (the raw
+``{"enc": ..., "protos": ...}``-style dict surface was removed; see
+docs/migration.md).  A model
 
   * is a registered JAX pytree (jit/vmap/checkpoint transparent) whose
     children are its array fields and whose aux data is static config
     (e.g. the decode metric), so jit specializes on it;
   * declares its own ``stored_leaves`` — the leaves that count against the
-    memory budget and receive bit flips — so the string-keyed
-    ``STORED_LEAVES`` table in ``core/evaluate.py`` is no longer needed;
-  * knows its own ``model_bits(bits)`` accounting and ``predict_encoded``;
+    memory budget and receive bit flips;
+  * knows its own ``model_bits(bits)`` accounting and implements
+    ``predict_encoded`` directly on its fields;
   * supports the uniform robustness pipeline
-    ``model.quantized(bits).corrupted(p, key).materialized()``.
+    ``model.quantized(bits).corrupted(p, key).materialized()`` and the
+    device-resident ``sweep_under_flips`` engine.
 
-``to_dict``/``from_dict`` round-trip to the legacy dict layout.  The
-quantize/corrupt methods are implemented *on top of that layout* through the
-same ``core.quantize``/``core.faults`` functions the dict path uses, so the
-typed pipeline is bit-for-bit identical to the historical
-``evaluate.quantize_stored`` + ``faults.corrupt_model`` path (the per-leaf
-PRNG key assignment depends on dict-key order, which to_dict preserves).
+``to_dict``/``from_dict`` flatten a model to a plain field dict — an
+*internal* detail the quantize/corrupt plumbing uses so the per-leaf PRNG
+key assignment (which depends on dict-key order) stays bit-for-bit stable
+across releases; they are not a supported exchange format.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, Optional
+from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.faults import corrupt_model
+from repro.core.profiles import activations, decode_profiles
 from repro.core.quantize import QTensor, dequantize_tree, quantize
+from repro.hdc.conventional import l2_normalize as _l2n
+from repro.hdc.conventional import predict_from_encoded
 
 __all__ = [
     "HDModel",
@@ -53,6 +56,18 @@ class HDModel:
     Subclasses are dataclasses whose fields (in declaration order) are the
     pytree children; ``aux_fields`` names fields carried as static aux data
     instead (part of the treedef, never traced).
+
+    The uniform surface every subclass provides:
+
+      ``predict_encoded(h)``      labels for pre-encoded queries
+      ``predict(x)``              encode with the model's own encoder, then
+                                  predict
+      ``model_bits(bits)``        storage accounting at ``bits``-bit precision
+      ``quantized(bits)``         post-training quantize the stored leaves
+      ``corrupted(p, key)``       flip each stored bit independently w.p. p
+      ``materialized()``          dequantize QTensor leaves back to f32
+      ``sweep_under_flips(...)``  the whole (p-grid x trials) robustness
+                                  surface in one jit
     """
 
     method: ClassVar[str]
@@ -75,9 +90,12 @@ class HDModel:
         kw.update(zip(cls.aux_fields, aux))
         return cls(**kw)
 
-    # ------------------------------------------------------- dict interop --
+    # ---------------------------------------------- internal dict interop --
     def to_dict(self) -> dict:
-        """Legacy dict layout (static fields excluded, None fields dropped)."""
+        """Internal field-dict layout (static fields excluded, None fields
+        dropped).  Used by the corrupt plumbing to pin the per-leaf PRNG key
+        order; not a supported exchange format — checkpoint with
+        ``repro.api.save_model`` instead."""
         out = {}
         for f in dataclasses.fields(self):
             if f.name in self.aux_fields:
@@ -142,13 +160,16 @@ class HDModel:
 
     # --------------------------------------------------------- interface --
     def predict_encoded(self, h: jax.Array) -> jax.Array:
+        """Labels for pre-encoded queries: (B, D) -> (B,) int."""
         raise NotImplementedError
 
     def predict(self, x: jax.Array) -> jax.Array:
+        """Encode raw features with the model's own encoder, then predict."""
         from repro.hdc.encoders import encode
         return self.predict_encoded(encode(self.enc, x, self.encoder_kind))
 
     def model_bits(self, bits: int) -> int:
+        """Stored-model size in bits at ``bits``-bit word precision."""
         raise NotImplementedError
 
     @property
@@ -170,10 +191,11 @@ class ConventionalModel(HDModel):
     aux_fields: ClassVar[tuple] = ("encoder_kind",)
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.hdc.conventional import predict_from_encoded
+        """argmax_c cosine(h, H_c) — inputs and prototypes L2-normalized."""
         return predict_from_encoded(self.protos, h)
 
     def model_bits(self, bits: int) -> int:
+        """C * D * bits — the uncompressed budget every fraction divides by."""
         c, d = _shape(self.protos)
         return c * d * bits
 
@@ -197,12 +219,12 @@ class SparseHDModel(HDModel):
     aux_fields: ClassVar[tuple] = ("encoder_kind",)
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.core.sparsehd import _predict_sparsehd_encoded
-        return _predict_sparsehd_encoded(self.to_dict(), h)
+        """Slice queries to the kept dimensions, then nearest prototype."""
+        h_s = _l2n(h[:, self.keep])
+        return jnp.argmax(h_s @ _l2n(self.protos).T, axis=-1)
 
     def model_bits(self, bits: int) -> int:
-        # same accounting as core.sparsehd.sparsehd_memory_bits, inlined so
-        # it also covers QTensor-leaved (quantized) models
+        """C * D' * bits for the kept values + D bits for the shared mask."""
         c, d_kept = _shape(self.protos)
         d_full = self.enc["proj"].shape[1]
         return c * d_kept * bits + d_full
@@ -230,10 +252,14 @@ class LogHDModel(HDModel):
     aux_fields: ClassVar[tuple] = ("metric", "encoder_kind")
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.core.loghd import _predict_loghd_encoded
-        return _predict_loghd_encoded(self.to_dict(), h, self.metric)
+        """Profile decode (Eq. 5-7): activations A(x) = h M^T, then the
+        nearest per-class profile under ``self.metric``."""
+        acts = activations(self.bundles, h)
+        return decode_profiles(self.profiles, acts, self.metric,
+                               sigma_inv=self.sigma_inv)
 
     def model_bits(self, bits: int) -> int:
+        """n*D*bits bundles + C*n*bits profiles (both are flip-injected)."""
         from repro.core.loghd import memory_bits
         n, d = _shape(self.bundles)
         c, _ = _shape(self.profiles)
@@ -266,10 +292,13 @@ class HybridModel(HDModel):
     aux_fields: ClassVar[tuple] = ("metric", "encoder_kind")
 
     def predict_encoded(self, h: jax.Array) -> jax.Array:
-        from repro.core.hybrid import _predict_hybrid_encoded
-        return _predict_hybrid_encoded(self.to_dict(), h, self.metric)
+        """Slice to the kept dimensions, renormalize, then profile-decode."""
+        h_s = _l2n(h[:, self.keep])
+        acts = h_s @ _l2n(self.bundles).T
+        return decode_profiles(self.profiles, acts, self.metric)
 
     def model_bits(self, bits: int) -> int:
+        """n*(1-S)*D + C*n value words at ``bits`` + D shared mask bits."""
         n, d_kept = _shape(self.bundles)
         c, _ = _shape(self.profiles)
         d_full = self.enc["proj"].shape[1]

@@ -23,7 +23,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.api import dispatch
+from repro.api import _impl, dispatch
 from repro.api.models import (ConventionalModel, HDModel, HybridModel,
                               LogHDModel, SparseHDModel)
 from repro.hdc.encoders import EncoderConfig, encode_batched
@@ -34,7 +34,13 @@ __all__ = ["MethodSpec", "register_method", "get_method",
 
 @dataclasses.dataclass(frozen=True)
 class MethodSpec:
-    """One registered classifier family."""
+    """One registered classifier family.
+
+    ``model_cls`` is the typed pytree model the family produces,
+    ``make_config(n_classes, **kw)`` builds its hyperparameter dataclass,
+    and ``fit(cfg, enc_cfg, x, y, *, enc, encoded, prototypes, base)``
+    trains and returns an ``HDModel`` (the built-in families' trainers live
+    in ``repro.api._impl``)."""
     name: str
     model_cls: type
     make_config: Callable[..., Any]       # (n_classes, **kw) -> cfg
@@ -46,12 +52,18 @@ _REGISTRY: dict[str, MethodSpec] = {}
 
 
 def register_method(spec: MethodSpec) -> MethodSpec:
-    """Register (or override) a classifier family under ``spec.name``."""
+    """Register (or override) a classifier family under ``spec.name``.
+
+    After registration the family is constructible through
+    ``make_classifier(spec.name, ...)`` and participates in every benchmark
+    or sweep that iterates ``available_methods()`` — no call-site changes."""
     _REGISTRY[spec.name] = spec
     return spec
 
 
 def get_method(name: str) -> MethodSpec:
+    """Look up a registered ``MethodSpec``; raises KeyError with the list of
+    known names on a miss."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -60,6 +72,11 @@ def get_method(name: str) -> MethodSpec:
 
 
 def available_methods() -> tuple:
+    """Sorted names of every registered family.
+
+    >>> available_methods()
+    ('conventional', 'hybrid', 'loghd', 'sparsehd')
+    """
     return tuple(sorted(_REGISTRY))
 
 
@@ -150,7 +167,12 @@ def make_classifier(name: str, n_classes: int,
     Either pass a full ``enc_cfg`` or ``in_features`` (+ optional ``dim``,
     ``encoder_kind``) for the default shared encoder.  ``method_kw`` goes to
     the family's config (e.g. ``k=3, extra_bundles=2`` for loghd,
-    ``sparsity=0.5`` for sparsehd)."""
+    ``sparsity=0.5`` for sparsehd).
+
+    >>> clf = make_classifier("loghd", n_classes=26, in_features=617)
+    >>> clf.method, clf.cfg.n_bundles
+    ('loghd', 5)
+    """
     spec = get_method(name)
     if enc_cfg is None:
         if in_features is None:
@@ -161,44 +183,6 @@ def make_classifier(name: str, n_classes: int,
 
 
 # ------------------------------------------------- built-in registrations
-
-
-def _fit_conventional(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
-                      prototypes=None, base=None) -> ConventionalModel:
-    from repro.hdc.conventional import _fit_conventional as fit_impl
-    if prototypes is not None and enc is not None and cfg.refine_epochs == 0:
-        return ConventionalModel(enc=enc, protos=prototypes,
-                                 encoder_kind=enc_cfg.kind)
-    return ConventionalModel.from_dict(
-        fit_impl(cfg, enc_cfg, x, y, enc=enc, encoded=encoded),
-        encoder_kind=enc_cfg.kind)
-
-
-def _fit_sparsehd(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
-                  prototypes=None, base=None) -> SparseHDModel:
-    from repro.core.sparsehd import _fit_sparsehd as fit_impl
-    return SparseHDModel.from_dict(
-        fit_impl(cfg, enc_cfg, x, y, prototypes=prototypes, enc=enc,
-                 encoded=encoded),
-        encoder_kind=enc_cfg.kind)
-
-
-def _fit_loghd(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
-               prototypes=None, base=None) -> LogHDModel:
-    from repro.core.loghd import _fit_loghd as fit_impl
-    return LogHDModel.from_dict(
-        fit_impl(cfg, enc_cfg, x, y, prototypes=prototypes, enc=enc,
-                 encoded=encoded),
-        metric=cfg.metric, encoder_kind=enc_cfg.kind)
-
-
-def _fit_hybrid(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
-                prototypes=None, base=None) -> HybridModel:
-    from repro.core.hybrid import _fit_hybrid as fit_impl
-    base_dict = base.to_dict() if isinstance(base, HDModel) else base
-    return HybridModel.from_dict(
-        fit_impl(cfg, enc_cfg, x, y, base=base_dict, encoded=encoded),
-        metric=cfg.loghd.metric, encoder_kind=enc_cfg.kind)
 
 
 def _conventional_config(n_classes: int, **kw):
@@ -230,8 +214,11 @@ def _hybrid_config(n_classes: int, *, sparsity: float = 0.5,
 
 
 register_method(MethodSpec("conventional", ConventionalModel,
-                           _conventional_config, _fit_conventional))
+                           _conventional_config,
+                           _impl.fit_conventional_model))
 register_method(MethodSpec("sparsehd", SparseHDModel,
-                           _sparsehd_config, _fit_sparsehd))
-register_method(MethodSpec("loghd", LogHDModel, _loghd_config, _fit_loghd))
-register_method(MethodSpec("hybrid", HybridModel, _hybrid_config, _fit_hybrid))
+                           _sparsehd_config, _impl.fit_sparsehd_model))
+register_method(MethodSpec("loghd", LogHDModel, _loghd_config,
+                           _impl.fit_loghd_model))
+register_method(MethodSpec("hybrid", HybridModel, _hybrid_config,
+                           _impl.fit_hybrid_model))

@@ -4,25 +4,26 @@ Submodules:
   codebook   — capacity-aware k-ary codebook (Eq. 2-3)
   bundling   — weighted superposition + perceptron refinement (Eq. 4, 8-9)
   profiles   — activation vectors + per-class profiles + decode (Eq. 5-7)
-  loghd      — end-to-end LogHD classifier (Algorithm 1)
-  sparsehd   — feature-axis baseline (SparseHD)
-  hybrid     — class-axis + feature-axis composition
+  loghd      — LogHD configuration + memory/budget accounting
+  sparsehd   — feature-axis baseline (SparseHD) config + pruning math
+  hybrid     — class-axis + feature-axis composition config
   quantize   — QuantHD-style post-training quantization (1/2/4/8 bit)
   faults     — stored-bit flip injection (exact integer-code semantics)
-  evaluate   — quantize -> flip -> predict harness
-  lm_head    — LogHD as a vocab-scale LM classification head
+  evaluate   — the device-resident fault-sweep engine
+
+Training and prediction go through the typed estimator API in ``repro.api``
+(``make_classifier`` / the model classes); this package holds the algorithm
+math those models are built from.
 """
 
 from repro.core.codebook import build_codebook, bundle_loads, min_bundles
 from repro.core.bundling import build_bundles, refine_bundles, symbol_targets
 from repro.core.profiles import (activations, decode_profiles,
                                  estimate_profiles, profile_scores)
-from repro.core.loghd import (LogHDConfig, fit_loghd, predict_loghd,
-                              predict_loghd_encoded, memory_bits,
-                              max_bundles_for_budget)
-from repro.core.sparsehd import (SparseHDConfig, fit_sparsehd,
-                                 predict_sparsehd, predict_sparsehd_encoded,
-                                 sparsity_for_budget)
-from repro.core.hybrid import HybridConfig, fit_hybrid, predict_hybrid
+from repro.core.loghd import (LogHDConfig, conventional_memory_bits,
+                              max_bundles_for_budget, memory_bits)
+from repro.core.sparsehd import (SparseHDConfig, dimension_saliency,
+                                 keep_indices, sparsity_for_budget)
+from repro.core.hybrid import HybridConfig
 from repro.core.quantize import QTensor, dequantize, quantize
 from repro.core.faults import corrupt_model, flip_bits_f32, flip_bits_int

@@ -11,16 +11,14 @@ scanned in vmap-sized chunks (``lax.map``), and the corrupt -> materialize ->
 predict -> accuracy composition never leaves the device until the final
 (|p_grid|, n_trials) accuracy matrix is transferred in a single host copy.
 ``evaluate_under_flips`` is a thin single-p wrapper over the same engine, so
-legacy callers keep their signature and key-for-key reproducibility.
+single-point callers keep key-for-key reproducibility with full sweeps.
 
-Accepts both model representations:
-
-  * typed models from ``repro.api`` (anything exposing ``stored_leaves``,
-    ``quantized``, ``corrupted``, ``materialized``, ``predict_encoded``) —
-    pass ``kind=None``/``predict_encoded=None`` and the model supplies its
-    own stored-leaf declaration and predict path;
-  * legacy raw dicts with an explicit ``kind`` + predict function
-    (deprecated; kept so external callers keep working).
+Models are the typed pytrees from ``repro.api`` — anything exposing
+``stored_leaves``, ``quantized``, ``corrupted_materialized`` and
+``predict_encoded``.  The historical raw-dict path (a ``kind`` string, a
+per-family predict function, and the module-level stored-leaf table and
+quantize helper) was removed with deprecation step 2; see
+docs/migration.md for the typed equivalents.
 
 Compiled executables are cached module-wide per (predict path, scope), so
 every flip trial, p-grid point and benchmark sweep with matching shapes
@@ -35,62 +33,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.faults import corrupt_model
-from repro.core.quantize import dequantize_tree, quantize_tree
-from repro.deprecation import warn_dict_api
-
-# DEPRECATED (module __getattr__ warns on access): which leaves of each
-# legacy dict-model kind constitute the *stored* (budget-counted) state.
-# Typed models (repro.api.models) declare their own `stored_leaves`.
-_STORED_LEAVES = {
-    "conventional": ("protos",),
-    "sparsehd": ("protos",),
-    "loghd": ("bundles", "profiles"),
-    "hybrid": ("bundles", "profiles"),
-}
+from repro.core.quantize import dequantize_tree
 
 
-def __getattr__(name: str):
-    if name == "STORED_LEAVES":
-        warn_dict_api("core.evaluate.STORED_LEAVES",
-                      "the model class's own `stored_leaves` declaration",
-                      stacklevel=2)
-        return _STORED_LEAVES
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-
-
-def _quantize_stored(model: dict, kind: str, bits: int) -> dict:
-    stored = _STORED_LEAVES[kind]
-    out = dict(model)
-    for name in stored:
-        out[name] = quantize_tree({name: model[name]}, bits)[name]
-    return out
-
-
-def quantize_stored(model: dict, kind: str, bits: int) -> dict:
-    """DEPRECATED: quantize the stored leaves of a legacy dict `model`.
-
-    Use ``model.quantized(bits)`` on a typed ``repro.api`` model instead."""
-    warn_dict_api("core.evaluate.quantize_stored",
-                  "repro.api model.quantized(bits)")
-    return _quantize_stored(model, kind, bits)
-
-
-def materialize(model: dict) -> dict:
-    """Dequantize any QTensor leaves back to f32 for inference."""
+def materialize(model):
+    """Dequantize any QTensor leaves of a pytree back to f32 for inference."""
     return dequantize_tree(model)
 
 
-# One compiled predict executable per predict function.  Keys are the
-# module-level predict functions (legacy path) or the model class's unbound
-# ``predict_encoded`` (typed path) — both stable objects, so every flip
-# trial, p-grid point and sweep iteration with matching shapes reuses the
-# same trace.
+# One compiled predict executable per model family: keyed on the class's
+# unbound ``predict_encoded`` (a stable object), so every flip trial, p-grid
+# point and sweep iteration with matching shapes reuses the same trace.
 _PREDICT_JIT_CACHE: dict = {}
 
 
 def jit_predict(predict_encoded: Callable) -> Callable:
-    """Jit-compile ``predict_encoded(model, h) -> labels`` with caching."""
+    """Jit-compile ``predict_encoded(model, h) -> labels`` with caching.
+
+    Pass a stable (module-level or class-level) callable — a fresh lambda
+    per call would defeat the cache and re-trace every time."""
     fn = _PREDICT_JIT_CACHE.get(predict_encoded)
     if fn is None:
         fn = jax.jit(predict_encoded)
@@ -98,18 +59,22 @@ def jit_predict(predict_encoded: Callable) -> Callable:
     return fn
 
 
-def _is_typed(model) -> bool:
-    return hasattr(model, "stored_leaves") and not isinstance(model, dict)
+def _require_typed(model):
+    if isinstance(model, dict) or not hasattr(model, "stored_leaves"):
+        raise TypeError(
+            "the evaluation harness takes typed repro.api models; the "
+            "raw-dict surface (kind= + predict function) was removed — "
+            "see docs/migration.md for the typed equivalent")
 
 
 # --------------------------------------------------------- sweep engine ----
 
 def trial_keys(key: jax.Array, n_trials: int) -> jax.Array:
-    """The legacy per-trial subkey chain (key -> split -> sub, repeated).
+    """The per-trial subkey chain (key -> split -> sub, repeated).
 
-    ``evaluate_under_flips`` historically drew its trial keys this way; the
+    ``evaluate_under_flips`` has always drawn its trial keys this way; the
     sweep engine reuses the chain so single-p results are key-for-key
-    reproducible against the per-trial loop."""
+    reproducible against a per-trial loop over the same key."""
     subs = []
     for _ in range(n_trials):
         key, sub = jax.random.split(key)
@@ -117,13 +82,12 @@ def trial_keys(key: jax.Array, n_trials: int) -> jax.Array:
     return jnp.stack(subs)
 
 
-# One compiled sweep executable per (corrupt+predict path, scope, bits).
-# Shape specialization within an entry is handled by jax.jit itself.
+# One compiled sweep executable per (predict path, scope, bits).  Shape
+# specialization within an entry is handled by jax.jit itself.
 _SWEEP_JIT_CACHE: dict = {}
 
 
-def _sweep_fn(pred: Callable, scope: str, typed: bool,
-              bits: Optional[int]) -> Callable:
+def _sweep_fn(pred: Callable, scope: str, bits: int) -> Callable:
     """Build (and cache) the jit-compiled sweep executable.
 
     The compiled graph computes, fully on device:
@@ -138,25 +102,18 @@ def _sweep_fn(pred: Callable, scope: str, typed: bool,
     one batched corrupt + one batched predict: XLA contracts the test
     encodings against every (p, trial) model variant in a single pass
     instead of streaming them once per grid point.  Quantization is part of
-    the graph (typed path), so no eager per-leaf work remains on the host.
+    the graph, so no eager per-leaf work remains on the host.
     """
-    cache_key = (pred, scope, typed, bits)
+    cache_key = (pred, scope, bits)
     fn = _SWEEP_JIT_CACHE.get(cache_key)
     if fn is not None:
         return fn
 
-    if typed:
-        def corrupt_mat(qmodel, p, sub):
-            return qmodel.corrupted_materialized(p, sub, scope)
-    else:
-        def corrupt_mat(qmodel, p, sub):
-            return materialize(corrupt_model(qmodel, p, sub, scope=scope))
-
     def sweep(model, h, y, p_chunks, tkeys):
-        qmodel = model.quantized(bits) if typed else model
+        qmodel = model.quantized(bits)
 
         def one(p, sub):
-            preds = pred(corrupt_mat(qmodel, p, sub), h)
+            preds = pred(qmodel.corrupted_materialized(p, sub, scope), h)
             return jnp.mean((preds == y).astype(jnp.float32))
 
         per_chunk = jax.vmap(
@@ -171,7 +128,6 @@ def _sweep_fn(pred: Callable, scope: str, typed: bool,
 def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
                       h_test: jax.Array, y_test, key: jax.Array, *,
                       n_trials: int = 3, scope: str = "all",
-                      kind: Optional[str] = None,
                       predict_encoded: Optional[Callable] = None,
                       p_chunk: Optional[int] = None) -> np.ndarray:
     """Full (|p_grid|, n_trials) accuracy matrix in one device-resident jit.
@@ -182,17 +138,28 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
     vmapped chunk; set a smaller chunk to bound transient memory on huge
     grids) — and returns the accuracy matrix with a single host transfer.
 
-    The same trial keys are reused for every p (common random numbers, and
-    exactly what the historical per-p ``evaluate_under_flips`` calls did),
-    so robustness curves are monotone-comparable across p.
+    The same trial keys are reused for every p (common random numbers), so
+    robustness curves are monotone-comparable across p.
 
-    Typed models: ``sweep_under_flips(model, bits, p_grid, h, y, key)``.
-    Legacy dicts additionally need ``kind`` and a ``predict_encoded`` —
-    that path is deprecated along with the rest of the raw-dict surface.
-    Compiled executables are cached on the identity of the predict
-    callable: pass a stable (module-level) function, not a fresh lambda
-    per call, or every call re-traces and re-compiles.
+    ``model`` is a typed ``repro.api`` model; ``predict_encoded`` optionally
+    overrides the family's own ``(model, h) -> labels`` predict path (pass a
+    stable module-level function, not a fresh lambda per call, or every call
+    re-traces).  Scalar convenience wrapper: ``evaluate_under_flips``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.api import make_classifier
+    >>> x = jax.random.normal(jax.random.PRNGKey(0), (40, 8))
+    >>> y = jnp.arange(40) % 2
+    >>> clf = make_classifier("conventional", n_classes=2, in_features=8,
+    ...                       dim=128).fit(x, y)
+    >>> from repro.hdc.encoders import encode_batched
+    >>> h = encode_batched(clf.model.enc, x, "cos")
+    >>> accs = sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y,
+    ...                          jax.random.PRNGKey(1), n_trials=2)
+    >>> accs.shape
+    (2, 2)
     """
+    _require_typed(model)
     n_trials = int(n_trials)
     if n_trials < 1:
         raise ValueError("n_trials must be >= 1")
@@ -201,18 +168,8 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
     if n_p == 0:
         return np.zeros((0, n_trials), np.float32)
 
-    if _is_typed(model):
-        qmodel = model                 # quantization happens inside the jit
-        pred = (predict_encoded if predict_encoded is not None
-                else type(model).predict_encoded)
-        typed = True
-    else:
-        if kind is None or predict_encoded is None:
-            raise ValueError("legacy dict models need `kind` and "
-                             "`predict_encoded`")
-        qmodel = _quantize_stored(model, kind, bits)
-        pred = predict_encoded
-        typed = False
+    pred = (predict_encoded if predict_encoded is not None
+            else type(model).predict_encoded)
 
     chunk = n_p if p_chunk is None else max(1, min(int(p_chunk), n_p))
     n_chunks = -(-n_p // chunk)
@@ -222,37 +179,31 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
     p_chunks = p_arr.reshape(n_chunks, chunk)
 
     tkeys = trial_keys(key, n_trials)
-    sweep = _sweep_fn(pred, scope, typed, int(bits) if typed else None)
-    out = sweep(qmodel, jnp.asarray(h_test), jnp.asarray(y_test),
+    sweep = _sweep_fn(pred, scope, int(bits))
+    out = sweep(model, jnp.asarray(h_test), jnp.asarray(y_test),
                 p_chunks, tkeys)
     out = out.reshape(n_chunks * chunk, n_trials)[:n_p]
     return np.asarray(out)                      # the single host transfer
 
 
-def evaluate_under_flips(model, kind: Optional[str], bits: int, p: float,
-                         predict_encoded: Optional[Callable],
-                         h_test: jax.Array, y_test: jax.Array,
-                         key: jax.Array, n_trials: int = 3,
-                         scope: str = "all") -> float:
-    """Mean test accuracy over `n_trials` independent flip draws.
+def evaluate_under_flips(model, bits: int, p: float, h_test: jax.Array,
+                         y_test: jax.Array, key: jax.Array,
+                         n_trials: int = 3, scope: str = "all") -> float:
+    """Mean test accuracy over `n_trials` independent flip draws at one p.
 
     Thin wrapper over ``sweep_under_flips`` with a single-point p-grid: the
     trial keys and per-leaf mask streams are identical, so a sweep row and a
     loop of single-p calls with the same key agree exactly.
-
-    Typed models: ``evaluate_under_flips(model, None, bits, p, None, ...)``
-    (or keyword-only).  Legacy dicts additionally need `kind` and a
-    ``predict_encoded(model_dict, h)`` function.
     """
     accs = sweep_under_flips(model, bits, [p], h_test, y_test, key,
-                             n_trials=n_trials, scope=scope, kind=kind,
-                             predict_encoded=predict_encoded)
+                             n_trials=n_trials, scope=scope)
     return float(np.mean(accs))
 
 
-def accuracy(predict_encoded: Callable, model, h_test: jax.Array,
-             y_test: jax.Array) -> float:
-    preds = jit_predict(predict_encoded)(model, h_test)
+def accuracy(model, h_test: jax.Array, y_test: jax.Array) -> float:
+    """Clean test accuracy of a typed model through the jit-predict cache."""
+    _require_typed(model)
+    preds = jit_predict(type(model).predict_encoded)(model, h_test)
     return float(jnp.mean(preds == y_test))
 
 

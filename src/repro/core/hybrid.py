@@ -7,104 +7,27 @@ sparsified activations so decoding stays calibrated.
 
 Memory:  n * (1-S) * D + C * n   words (+ D mask bits).
 
-NOTE: the raw-dict surface here is the deprecated backend of the typed
-estimator API — new code should use
-`repro.api.make_classifier("hybrid", ...)` / `repro.api.HybridModel`.
+This module carries the configuration and budget accounting; the trainer
+lives in ``repro.api`` (``make_classifier("hybrid", ...)`` /
+``HybridModel``).  The raw-dict ``fit_hybrid``/``predict_hybrid*`` surface
+was removed — see docs/migration.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.loghd import LogHDConfig, _fit_loghd
-from repro.core.profiles import decode_profiles, estimate_profiles
-from repro.core.sparsehd import dimension_saliency
-from repro.deprecation import warn_dict_api
-from repro.hdc.encoders import EncoderConfig, encode, encode_batched
+from repro.core.loghd import LogHDConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class HybridConfig:
+    """LogHD config plus the feature-axis sparsity applied to its bundles."""
     loghd: LogHDConfig
     sparsity: float = 0.5
     saliency: str = "spread"
-
-
-def _l2n(v, axis=-1, eps=1e-12):
-    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
-
-
-def _fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
-                y: jax.Array, *, base: Optional[dict] = None,
-                encoded: Optional[jax.Array] = None) -> dict:
-    """Returns {enc, bundles (n, D'), profiles (C, n), keep (D',), codebook}."""
-    if base is None:
-        base = _fit_loghd(cfg.loghd, enc_cfg, x, y, encoded=encoded)
-    h = (encode_batched(base["enc"], x, enc_cfg.kind)
-         if encoded is None else encoded)
-
-    d = base["bundles"].shape[1]
-    n_keep = max(1, int(round((1.0 - cfg.sparsity) * d)))
-    sal = dimension_saliency(base["bundles"], cfg.saliency)
-    _, idx = jax.lax.top_k(sal, n_keep)
-    keep = jnp.sort(idx)
-
-    bundles_s = _l2n(base["bundles"][:, keep])
-    h_s = _l2n(h[:, keep])
-    profiles = estimate_profiles(bundles_s, h_s, y, cfg.loghd.n_classes)
-    return {"enc": base["enc"], "bundles": bundles_s, "profiles": profiles,
-            "keep": keep, "codebook": base["codebook"]}
-
-
-def _predict_hybrid(model: dict, x: jax.Array, kind: str = "cos",
-                    metric: str = "l2") -> jax.Array:
-    h = encode(model["enc"], x, kind)
-    h_s = _l2n(h[:, model["keep"]])
-    acts = h_s @ _l2n(model["bundles"]).T
-    return decode_profiles(model["profiles"], acts, metric)
-
-
-def _predict_hybrid_encoded(model: dict, h: jax.Array,
-                            metric: str = "l2") -> jax.Array:
-    h_s = _l2n(h[:, model["keep"]])
-    acts = h_s @ _l2n(model["bundles"]).T
-    return decode_profiles(model["profiles"], acts, metric)
-
-
-# ------------------------------------------------ deprecated dict surface --
-
-def fit_hybrid(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
-               y: jax.Array, **kw) -> dict:
-    """DEPRECATED raw-dict trainer; use
-    ``repro.api.make_classifier("hybrid", ...).fit(...)``."""
-    warn_dict_api("fit_hybrid", "repro.api.make_classifier('hybrid', ...)")
-    return _fit_hybrid(cfg, enc_cfg, x, y, **kw)
-
-
-def predict_hybrid(model: dict, x: jax.Array, kind: str = "cos",
-                   metric: str = "l2") -> jax.Array:
-    """DEPRECATED raw-dict predict; use ``HybridModel.predict``."""
-    warn_dict_api("predict_hybrid", "repro.api.HybridModel.predict")
-    return _predict_hybrid(model, x, kind, metric)
-
-
-def predict_hybrid_encoded(model: dict, h: jax.Array,
-                           metric: str = "l2") -> jax.Array:
-    """DEPRECATED raw-dict predict; use ``HybridModel.predict_encoded``."""
-    warn_dict_api("predict_hybrid_encoded",
-                  "repro.api.HybridModel.predict_encoded")
-    return _predict_hybrid_encoded(model, h, metric)
-
-
-def hybrid_memory_bits(model: dict, bits: int) -> int:
-    n, d_kept = model["bundles"].shape
-    c, _ = model["profiles"].shape
-    d_full = model["enc"]["proj"].shape[1]
-    return n * d_kept * bits + c * n * bits + d_full
 
 
 def sparsity_for_budget(budget_fraction: float, n_classes: int, dim: int,

@@ -1,6 +1,6 @@
-"""LogHD classifier (paper Algorithm 1): the primary contribution.
+"""LogHD configuration and memory accounting (paper Algorithm 1).
 
-Replaces the C per-class prototypes of conventional HDC with
+LogHD replaces the C per-class prototypes of conventional HDC with
 n >= ceil(log_k C) bundle hypervectors plus per-class activation profiles:
 
   memory:  O(C*D)  ->  O(n*D + C*n)  =  O(D log_k C)   for D >> C
@@ -15,33 +15,30 @@ Pipeline (Algorithm 1):
       (+ profile re-estimation so decoding stays consistent)
   (6) inference              argmin_c ||A(x_q) - P_c||^2         (Eq. 7)
 
-NOTE: the raw-dict surface here (`fit_loghd` returning a dict,
-`predict_loghd_encoded(dict, h)`) is the deprecated backend of the typed
-estimator API — new code should use `repro.api.make_classifier("loghd", ...)`
-/ `repro.api.LogHDModel`, which wrap these functions.  See ROADMAP
-"Open items" for the removal plan.
+This module carries the *configuration and budget math* only.  The trainer
+lives in ``repro.api`` (``make_classifier("loghd", ...)``), the fitted model
+is ``repro.api.LogHDModel``, and the pipeline stages are the sibling core
+modules (``codebook``, ``bundling``, ``profiles``).  The raw-dict
+``fit_loghd``/``predict_loghd*`` surface was removed — see docs/migration.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core import codebook as cb
-from repro.core.bundling import build_bundles, refine_bundles
-from repro.core.profiles import activations, decode_profiles, estimate_profiles
-from repro.deprecation import warn_dict_api
-from repro.hdc.conventional import class_prototypes
-from repro.hdc.encoders import EncoderConfig, encode, encode_batched, init_encoder
 
 
 @dataclasses.dataclass(frozen=True)
 class LogHDConfig:
+    """Hyperparameters for the LogHD class-axis compressor.
+
+    ``n_bundles`` is derived: ceil(log_k C) + ``extra_bundles``.
+
+    >>> LogHDConfig(n_classes=26, k=2, extra_bundles=2).n_bundles
+    7
+    """
     n_classes: int
     k: int = 2                       # alphabet size (paper: k in {2, 3})
     extra_bundles: int = 0           # eps redundancy in {0, 1, 2} (Sec. III-G)
@@ -66,12 +63,21 @@ def memory_bits(n_classes: int, dim: int, n_bundles: int, bits: int,
     """LogHD model storage: n bundles of length D plus C profiles of length n.
 
     Bit flips are injected into both (Sec. IV-A), so both count against the
-    budget."""
+    budget.
+
+    >>> memory_bits(26, 10_000, 5, 1)
+    50130
+    """
     pb = bits if profile_bits is None else profile_bits
     return n_bundles * dim * bits + n_classes * n_bundles * pb
 
 
 def conventional_memory_bits(n_classes: int, dim: int, bits: int) -> int:
+    """Baseline storage C*D*bits — the denominator of every budget fraction.
+
+    >>> conventional_memory_bits(26, 10_000, 1)
+    260000
+    """
     return n_classes * dim * bits
 
 
@@ -83,7 +89,13 @@ def max_bundles_for_budget(budget_fraction: float, n_classes: int, dim: int,
     floor ceil(log_k C)/C (Sec. IV-B).  When the budget sits below that
     floor, `strict=True` (default) raises ValueError; `strict=False` clamps
     to the floor `min_bundles(C, k)` (the returned n then *exceeds* the
-    requested budget — callers must re-check the accounting)."""
+    requested budget — callers must re-check the accounting).
+
+    >>> max_bundles_for_budget(0.4, 26, 10_000, 2)
+    10
+    >>> max_bundles_for_budget(0.0001, 26, 10_000, 2, strict=False)
+    5
+    """
     n = int(budget_fraction * n_classes * dim / (dim + n_classes))
     floor = cb.min_bundles(n_classes, k)
     if n < floor:
@@ -95,89 +107,3 @@ def max_bundles_for_budget(budget_fraction: float, n_classes: int, dim: int,
                 f"feasibility floor); pass strict=False to clamp")
         return floor
     return n
-
-
-def _fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
-               y: jax.Array, *, prototypes: Optional[jax.Array] = None,
-               enc: Optional[dict] = None,
-               encoded: Optional[jax.Array] = None) -> dict:
-    """Train a LogHD model.  Returns a pytree:
-       {enc, bundles (n,D), profiles (C,n), codebook (C,n) int32,
-        sigma_inv (n,n)}.
-
-    `enc`/`encoded`/`prototypes` let callers share work across methods (the
-    paper trains all methods from the same encoder and prototypes).
-    `sigma_inv` (pooled within-class activation covariance inverse) supports
-    the paper's optional Mahalanobis decode variant (Sec. III-E); the l2
-    default ignores it.
-    """
-    if enc is None or encoded is None:
-        from repro.hdc.encoders import fit_encoder
-        enc, h = fit_encoder(enc_cfg, x)
-    else:
-        h = encoded
-    protos = (class_prototypes(h, y, cfg.n_classes)
-              if prototypes is None else prototypes)
-
-    book = cb.build_codebook(cfg.n_classes, cfg.n_bundles, cfg.k,
-                             alpha=cfg.alpha, seed=cfg.seed,
-                             method=cfg.codebook_method)
-    book_j = jnp.asarray(book)
-    bundles = build_bundles(protos, book_j, cfg.k, bipolar=cfg.bipolar_init)
-    bundles = refine_bundles(bundles, h, y, book_j, cfg.k,
-                             epochs=cfg.refine_epochs, lr=cfg.lr,
-                             batch_size=cfg.refine_batch, seed=cfg.seed)
-    profiles = estimate_profiles(bundles, h, y, cfg.n_classes)
-
-    n = cfg.n_bundles
-    acts = h @ bundles.T
-    resid = acts - profiles[y]
-    sigma = resid.T @ resid / resid.shape[0] + 1e-6 * jnp.eye(n)
-    return {"enc": enc, "bundles": bundles, "profiles": profiles,
-            "codebook": book_j, "sigma_inv": jnp.linalg.inv(sigma)}
-
-
-def _predict_loghd(model: dict, x: jax.Array, kind: str = "cos",
-                   metric: str = "l2") -> jax.Array:
-    h = encode(model["enc"], x, kind)
-    acts = activations(model["bundles"], h)
-    return decode_profiles(model["profiles"], acts, metric,
-                           sigma_inv=model.get("sigma_inv"))
-
-
-def _predict_loghd_encoded(model: dict, h: jax.Array,
-                           metric: str = "l2") -> jax.Array:
-    acts = activations(model["bundles"], h)
-    return decode_profiles(model["profiles"], acts, metric,
-                           sigma_inv=model.get("sigma_inv"))
-
-
-# ------------------------------------------------ deprecated dict surface --
-
-def fit_loghd(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
-              y: jax.Array, **kw) -> dict:
-    """DEPRECATED raw-dict trainer; use
-    ``repro.api.make_classifier("loghd", ...).fit(...)``."""
-    warn_dict_api("fit_loghd", "repro.api.make_classifier('loghd', ...)")
-    return _fit_loghd(cfg, enc_cfg, x, y, **kw)
-
-
-def predict_loghd(model: dict, x: jax.Array, kind: str = "cos",
-                  metric: str = "l2") -> jax.Array:
-    """DEPRECATED raw-dict predict; use ``LogHDModel.predict``."""
-    warn_dict_api("predict_loghd", "repro.api.LogHDModel.predict")
-    return _predict_loghd(model, x, kind, metric)
-
-
-def predict_loghd_encoded(model: dict, h: jax.Array,
-                          metric: str = "l2") -> jax.Array:
-    """DEPRECATED raw-dict predict; use ``LogHDModel.predict_encoded``."""
-    warn_dict_api("predict_loghd_encoded",
-                  "repro.api.LogHDModel.predict_encoded")
-    return _predict_loghd_encoded(model, h, metric)
-
-
-def loghd_model_bits(model: dict, bits: int) -> int:
-    n, d = model["bundles"].shape
-    c, _ = model["profiles"].shape
-    return memory_bits(c, d, n, bits)

@@ -1,4 +1,4 @@
-"""SparseHD baseline: feature-axis (dimension-wise) sparsification.
+"""SparseHD baseline math: feature-axis (dimension-wise) sparsification.
 
 The representative state-of-the-art feature-axis compressor the paper
 compares against (Imani et al., FCCM'19).  Dimension-wise sparsification
@@ -12,29 +12,27 @@ Saliency options (SparseHD uses the class-value spread):
   "variance" — var_c H[c, d]
 
 After pruning, a few OnlineHD-style retraining passes over the *kept*
-coordinates recover most of the clean-accuracy loss (the paper's SparseHD
-uses iterative retraining; we expose `retrain_epochs`).
+coordinates (``repro.hdc.conventional.onlinehd_epoch``) recover most of the
+clean-accuracy loss.
 
-NOTE: the raw-dict surface here is the deprecated backend of the typed
-estimator API — new code should use
-`repro.api.make_classifier("sparsehd", ...)` / `repro.api.SparseHDModel`.
+This module carries the configuration, saliency/pruning math and budget
+accounting; the trainer lives in ``repro.api``
+(``make_classifier("sparsehd", ...)`` / ``SparseHDModel``).  The raw-dict
+``fit_sparsehd``/``predict_sparsehd*`` surface was removed — see
+docs/migration.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.deprecation import warn_dict_api
-from repro.hdc.conventional import class_prototypes
-from repro.hdc.encoders import EncoderConfig, encode, encode_batched, init_encoder
-
 
 @dataclasses.dataclass(frozen=True)
 class SparseHDConfig:
+    """Hyperparameters for the SparseHD feature-axis baseline."""
     n_classes: int
     sparsity: float = 0.5           # S: fraction of dimensions dropped
     saliency: str = "spread"
@@ -44,11 +42,14 @@ class SparseHDConfig:
     seed: int = 0
 
 
-def _l2n(v, axis=-1, eps=1e-12):
-    return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
-
-
 def dimension_saliency(protos: jax.Array, kind: str = "spread") -> jax.Array:
+    """Per-dimension saliency score over class prototypes: (C, D) -> (D,).
+
+    >>> import jax.numpy as jnp
+    >>> protos = jnp.array([[0.0, 1.0], [0.0, -1.0]])
+    >>> dimension_saliency(protos, "spread").tolist()
+    [0.0, 2.0]
+    """
     if kind == "spread":
         return jnp.max(protos, axis=0) - jnp.min(protos, axis=0)
     if kind == "variance":
@@ -64,97 +65,6 @@ def keep_indices(protos: jax.Array, sparsity: float,
     sal = dimension_saliency(protos, kind)
     _, idx = jax.lax.top_k(sal, n_keep)
     return jnp.sort(idx)
-
-
-def _retrain_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
-                   lr: float, batch_size: int) -> jax.Array:
-    """OnlineHD pass in the reduced space (same rule as hdc.conventional)."""
-    n = h.shape[0]
-    n_batches = max(n // batch_size, 1)
-    usable = n_batches * batch_size
-    hb = h[:usable].reshape(n_batches, batch_size, -1)
-    yb = y[:usable].reshape(n_batches, batch_size)
-
-    def step(protos, batch):
-        hh, yy = batch
-        sims = hh @ protos.T
-        pred = jnp.argmax(sims, axis=-1)
-        wrong = (pred != yy).astype(hh.dtype)
-        s_true = jnp.take_along_axis(sims, yy[:, None], axis=-1)[:, 0]
-        s_pred = jnp.take_along_axis(sims, pred[:, None], axis=-1)[:, 0]
-        onehot_y = jax.nn.one_hot(yy, protos.shape[0], dtype=hh.dtype)
-        onehot_p = jax.nn.one_hot(pred, protos.shape[0], dtype=hh.dtype)
-        delta = jnp.einsum("b,bc,bd->cd", lr * wrong * (1 - s_true), onehot_y, hh)
-        delta -= jnp.einsum("b,bc,bd->cd", lr * wrong * (1 - s_pred), onehot_p, hh)
-        return _l2n(protos + delta), None
-
-    protos, _ = jax.lax.scan(step, protos, (hb, yb))
-    return protos
-
-
-def _fit_sparsehd(cfg: SparseHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
-                  y: jax.Array, *, prototypes: Optional[jax.Array] = None,
-                  enc: Optional[dict] = None,
-                  encoded: Optional[jax.Array] = None) -> dict:
-    """Returns {enc, protos (C, D'), keep (D',) int32}."""
-    if enc is None or encoded is None:
-        from repro.hdc.encoders import fit_encoder
-        enc, h = fit_encoder(enc_cfg, x)
-    else:
-        h = encoded
-    protos = (class_prototypes(h, y, cfg.n_classes)
-              if prototypes is None else prototypes)
-    keep = keep_indices(protos, cfg.sparsity, cfg.saliency)
-    protos_s = _l2n(protos[:, keep])
-    h_s = _l2n(h[:, keep])
-    for _ in range(cfg.retrain_epochs):
-        protos_s = _retrain_epoch(protos_s, h_s, y, cfg.lr, cfg.batch_size)
-    return {"enc": enc, "protos": protos_s, "keep": keep}
-
-
-def _predict_sparsehd(model: dict, x: jax.Array,
-                      kind: str = "cos") -> jax.Array:
-    h = encode(model["enc"], x, kind)
-    h_s = _l2n(h[:, model["keep"]])
-    return jnp.argmax(h_s @ _l2n(model["protos"]).T, axis=-1)
-
-
-def _predict_sparsehd_encoded(model: dict, h: jax.Array) -> jax.Array:
-    h_s = _l2n(h[:, model["keep"]])
-    return jnp.argmax(h_s @ _l2n(model["protos"]).T, axis=-1)
-
-
-# ------------------------------------------------ deprecated dict surface --
-
-def fit_sparsehd(cfg: SparseHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
-                 y: jax.Array, **kw) -> dict:
-    """DEPRECATED raw-dict trainer; use
-    ``repro.api.make_classifier("sparsehd", ...).fit(...)``."""
-    warn_dict_api("fit_sparsehd",
-                  "repro.api.make_classifier('sparsehd', ...)")
-    return _fit_sparsehd(cfg, enc_cfg, x, y, **kw)
-
-
-def predict_sparsehd(model: dict, x: jax.Array,
-                     kind: str = "cos") -> jax.Array:
-    """DEPRECATED raw-dict predict; use ``SparseHDModel.predict``."""
-    warn_dict_api("predict_sparsehd", "repro.api.SparseHDModel.predict")
-    return _predict_sparsehd(model, x, kind)
-
-
-def predict_sparsehd_encoded(model: dict, h: jax.Array) -> jax.Array:
-    """DEPRECATED raw-dict predict; use
-    ``SparseHDModel.predict_encoded``."""
-    warn_dict_api("predict_sparsehd_encoded",
-                  "repro.api.SparseHDModel.predict_encoded")
-    return _predict_sparsehd_encoded(model, h)
-
-
-def sparsehd_memory_bits(model: dict, bits: int) -> int:
-    """C * D' * bits for values + D bits for the shared keep-mask."""
-    c, d_kept = model["protos"].shape
-    d_full = model["enc"]["proj"].shape[1]
-    return c * d_kept * bits + d_full
 
 
 def sparsity_for_budget(budget_fraction: float, n_classes: int, dim: int,

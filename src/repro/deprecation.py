@@ -1,29 +1,18 @@
-"""Dict-API deprecation machinery (ROADMAP "Open items", step 1 of 2).
+"""Tombstone: the raw-dict classifier API is gone (deprecation step 2 of 2).
 
-The raw-dict classifier surface (``fit_* -> dict``, ``predict_*_encoded(dict,
-h)``, ``STORED_LEAVES``/``quantize_stored``) is superseded by the typed
-estimator API in ``repro.api``.  Step 1 makes every dict-facing wrapper warn;
-step 2 (two PRs out, per ROADMAP) deletes the wrappers once no external
-callers remain.  In-repo code never goes through the warning wrappers — the
-typed models and the method registry call the private ``_``-prefixed
-implementations directly, and a test asserts the typed path is warning-free.
+Step 1 made every raw-dict entry point — ``fit_* -> dict``,
+``predict_*``/``predict_*_encoded(dict, h)``, ``core.evaluate.STORED_LEAVES``
+and ``core.evaluate.quantize_stored`` — emit ``DictAPIDeprecationWarning``
+from this module.  Step 2 deleted those entry points *and* the warning
+machinery itself: the typed estimator API in ``repro.api`` is the only
+surface, so there is nothing left to warn about.
+
+Migration recipes for every removed symbol live in ``docs/migration.md``.
+This module is intentionally empty of code; it remains only so stale
+``filterwarnings = ignore::repro.deprecation....`` pins fail loudly at the
+attribute (not the import) and point here.
 """
 
 from __future__ import annotations
 
-import warnings
-
-__all__ = ["DictAPIDeprecationWarning", "warn_dict_api"]
-
-
-class DictAPIDeprecationWarning(DeprecationWarning):
-    """Raised (as a warning) by the deprecated raw-dict classifier surface."""
-
-
-def warn_dict_api(name: str, replacement: str, *, stacklevel: int = 3) -> None:
-    """Emit the step-1 deprecation warning for a raw-dict entry point."""
-    warnings.warn(
-        f"{name} (raw-dict classifier API) is deprecated and will be removed"
-        f" once the dict-API removal plan completes (see ROADMAP Open items);"
-        f" use {replacement} instead.",
-        DictAPIDeprecationWarning, stacklevel=stacklevel)
+__all__: list = []

@@ -1,11 +1,12 @@
-"""HDC substrate: encoders and the conventional prototype-per-class classifier."""
+"""HDC substrate: encoders and the conventional prototype-per-class math."""
 
 from repro.hdc.encoders import EncoderConfig, init_encoder, encode, fit_encoder
 from repro.hdc.id_level import (IDLevelConfig, init_id_level,
                                 encode_id_level, fit_id_level)
 from repro.hdc.conventional import (
     ConventionalConfig,
-    fit_conventional,
-    predict_conventional,
     class_prototypes,
+    l2_normalize,
+    onlinehd_epoch,
+    predict_from_encoded,
 )

@@ -1,10 +1,15 @@
-"""Conventional HDC classifier: one prototype per class (the paper's baseline).
+"""Conventional HDC classifier math: one prototype per class (the paper's
+baseline).
 
 Training: H_c = sum of phi(x) over class-c examples, then L2-normalize
 (Algorithm 1, step 1).  Inference: argmax_c cosine(phi(x), H_c).
 
-Optionally supports OnlineHD-style iterative refinement of prototypes, which
-the paper uses as the shared "optimization hyperparameters" across methods.
+This module holds the *math* only — prototype superposition, the OnlineHD
+refinement pass shared with SparseHD retraining, and encoded-space predict.
+Model construction and the end-to-end estimator live in ``repro.api``
+(``make_classifier("conventional", ...)`` / ``ConventionalModel``); the
+raw-dict ``fit_conventional``/``predict_conventional`` surface was removed
+(see docs/migration.md).
 """
 
 from __future__ import annotations
@@ -14,33 +19,53 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.deprecation import warn_dict_api
-from repro.hdc.encoders import EncoderConfig, encode, init_encoder
-
 
 @dataclasses.dataclass(frozen=True)
 class ConventionalConfig:
+    """Hyperparameters for the conventional prototype-per-class baseline.
+
+    ``refine_epochs`` OnlineHD-style passes (0 = pure superposition) with
+    learning rate ``lr`` over mini-batches of ``batch_size``."""
     n_classes: int
     refine_epochs: int = 0       # OnlineHD-style passes (0 = pure superposition)
     lr: float = 3e-4
     batch_size: int = 256
 
 
-def _l2n(v, axis=-1, eps=1e-12):
+def l2_normalize(v, axis=-1, eps=1e-12):
+    """Safe L2 normalization, shared by the prototype/bundle predict paths.
+
+    The api layer (models, trainers) imports this one definition so the
+    normalization the classifiers fit with and predict with can never
+    drift apart."""
     return v / (jnp.linalg.norm(v, axis=axis, keepdims=True) + eps)
 
 
+_l2n = l2_normalize
+
+
 def class_prototypes(h: jax.Array, y: jax.Array, n_classes: int) -> jax.Array:
-    """Superpose encoded examples per class: (N, D), (N,) -> (C, D) normalized."""
+    """Superpose encoded examples per class: (N, D), (N,) -> (C, D) normalized.
+
+    >>> import jax.numpy as jnp
+    >>> h = jnp.eye(4)
+    >>> class_prototypes(h, jnp.array([0, 0, 1, 1]), 2).shape
+    (2, 4)
+    """
     onehot = jax.nn.one_hot(y, n_classes, dtype=h.dtype)          # (N, C)
     protos = jnp.einsum("nc,nd->cd", onehot, h)
     return _l2n(protos)
 
 
-def _refine_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
-                  lr: float, batch_size: int) -> jax.Array:
-    """One OnlineHD pass: pull the true prototype toward misclassified queries
-    and push the winning wrong prototype away, scaled by the similarity gap."""
+def onlinehd_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
+                   lr: float, batch_size: int) -> jax.Array:
+    """One OnlineHD refinement pass over prototypes in any (sub)space.
+
+    Pulls the true prototype toward misclassified queries and pushes the
+    winning wrong prototype away, scaled by the similarity gap.  The same
+    update serves conventional-HDC refinement and SparseHD retraining in
+    the pruned subspace (the two historically carried duplicate copies).
+    """
     n = h.shape[0]
     n_batches = max(n // batch_size, 1)
     usable = n_batches * batch_size
@@ -67,46 +92,12 @@ def _refine_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
     return protos
 
 
-def _fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
-                      x: jax.Array, y: jax.Array, *, enc=None,
-                      encoded=None) -> dict:
-    """Train the baseline model.  Returns {enc, protos} pytree."""
-    if enc is None or encoded is None:
-        from repro.hdc.encoders import fit_encoder
-        enc, h = fit_encoder(enc_cfg, x)
-    else:
-        h = encoded
-    protos = class_prototypes(h, y, cfg.n_classes)
-    for _ in range(cfg.refine_epochs):
-        protos = _refine_epoch(protos, h, y, cfg.lr, cfg.batch_size)
-    return {"enc": enc, "protos": protos}
-
-
-def _predict_conventional(model: dict, x: jax.Array,
-                          kind: str = "cos") -> jax.Array:
-    h = encode(model["enc"], x, kind)
-    protos = _l2n(model["protos"])
-    return jnp.argmax(h @ protos.T, axis=-1)
-
-
-# ------------------------------------------------ deprecated dict surface --
-
-def fit_conventional(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
-                     x: jax.Array, y: jax.Array, **kw) -> dict:
-    """DEPRECATED raw-dict trainer; use
-    ``repro.api.make_classifier("conventional", ...).fit(...)``."""
-    warn_dict_api("fit_conventional",
-                  "repro.api.make_classifier('conventional', ...)")
-    return _fit_conventional(cfg, enc_cfg, x, y, **kw)
-
-
-def predict_conventional(model: dict, x: jax.Array,
-                         kind: str = "cos") -> jax.Array:
-    """DEPRECATED raw-dict predict; use ``ConventionalModel.predict``."""
-    warn_dict_api("predict_conventional",
-                  "repro.api.ConventionalModel.predict")
-    return _predict_conventional(model, x, kind)
-
-
 def predict_from_encoded(protos: jax.Array, h: jax.Array) -> jax.Array:
+    """Nearest-prototype labels for pre-encoded queries: (C, D), (B, D) -> (B,).
+
+    >>> import jax.numpy as jnp
+    >>> protos = jnp.eye(3)
+    >>> predict_from_encoded(protos, jnp.array([[0.1, 0.9, 0.0]])).tolist()
+    [1]
+    """
     return jnp.argmax(h @ _l2n(protos).T, axis=-1)

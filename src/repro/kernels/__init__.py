@@ -8,6 +8,8 @@
                    the encode stage.
   loghd_head     — the LogHD LM head: bundle_sim + profile_decode chained
                    at vocabulary scale (C = vocab).
+  flip_corrupt   — fused PRNG -> XOR bit-flip -> sign-extend -> dequantize,
+                   the fault-sweep trial body in one HBM pass.
 
 Each kernel directory holds:
   <name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling

@@ -10,15 +10,10 @@ from hypothesis import given, settings, strategies as st
 from repro.core import codebook as cb
 from repro.core.bundling import build_bundles, refine_bundles, symbol_targets
 from repro.core.faults import corrupt_model, flip_bits_f32, flip_bits_int
-from repro.core.loghd import (LogHDConfig, fit_loghd, max_bundles_for_budget,
-                              memory_bits, predict_loghd_encoded)
+from repro.core.loghd import max_bundles_for_budget, memory_bits
 from repro.core.profiles import (activations, decode_profiles,
                                  estimate_profiles)
 from repro.core.quantize import QTensor, dequantize, quantize
-
-# parts of this module deliberately exercise the deprecated raw-dict backend
-pytestmark = pytest.mark.filterwarnings(
-    "ignore::repro.deprecation.DictAPIDeprecationWarning")
 
 
 # ------------------------------------------------------------- codebook ---

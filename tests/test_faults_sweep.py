@@ -1,6 +1,6 @@
 """Fault-sweep engine + packed-mask tests.
 
-Covers the PR-4 tentpole surface:
+Covers the fault-sweep tentpole surface:
   * bit-exact parity of the packed mask generator vs the per-bit expansion
     at fixed per-plane keys,
   * flip-rate chi-squared sanity for the packed masks,
@@ -8,11 +8,14 @@ Covers the PR-4 tentpole surface:
     eager loop over the same keys, plus a statistical CI check across
     independent keys,
   * chunked vs full-vmap sweep invariance,
-  * dict-API deprecation step 1: the raw-dict wrappers warn, the typed
-    path and the benchmark modules never do.
+  * dict-API deletion (deprecation step 2): the former raw-dict entry
+    points no longer exist, the algorithm modules import warning-free, and
+    the engine rejects dict models with a migration hint.
 """
 
-import warnings
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +24,9 @@ import pytest
 
 from repro.api import make_classifier
 from repro.core import evaluate as ev
-from repro.core.faults import (bit_plane_keys, corrupt_model, flip_bits_f32,
-                               flip_bits_int, packed_flip_mask)
+from repro.core.faults import (bit_plane_keys, flip_bits_f32, flip_bits_int,
+                               packed_flip_mask)
 from repro.core.quantize import QTensor, quantize
-from repro.deprecation import DictAPIDeprecationWarning
 from repro.hdc.encoders import encode_batched
 
 C, F, D = 6, 16, 512
@@ -132,10 +134,10 @@ def test_evaluate_under_flips_is_sweep_row():
     clf, h, y = _fitted()
     key = jax.random.PRNGKey(12)
     accs = ev.sweep_under_flips(clf.model, 4, [0.1], h, y, key, n_trials=4)
-    e = ev.evaluate_under_flips(clf.model, None, 4, 0.1, None, h, y, key, 4)
+    e = ev.evaluate_under_flips(clf.model, 4, 0.1, h, y, key, 4)
     assert abs(e - float(accs.mean())) < 1e-6
     # key-for-key reproducible
-    e2 = ev.evaluate_under_flips(clf.model, None, 4, 0.1, None, h, y, key, 4)
+    e2 = ev.evaluate_under_flips(clf.model, 4, 0.1, h, y, key, 4)
     assert e == e2
 
 
@@ -164,26 +166,31 @@ def test_sweep_statistical_ci_vs_independent_loop():
     assert abs(a.mean() - b.mean()) <= max(5 * se, 0.05), (a, b)
 
 
-def test_sweep_under_flips_dict_path_matches_typed():
-    """The deprecated dict path runs through the same engine and must agree
-    with the typed path exactly (same masks, same predict math)."""
-    from repro.core.loghd import _predict_loghd_encoded
+def _override_predict(model, h):
+    """Module-level predict override (stable identity for the jit cache)."""
+    return type(model).predict_encoded(model, h)
+
+
+def test_sweep_predict_override_matches_default():
+    """An explicit ``predict_encoded`` override computing the same math must
+    reproduce the default family path exactly (same masks, same predict)."""
     clf, h, y = _fitted()
     key = jax.random.PRNGKey(14)
-    typed = ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key,
-                                 n_trials=2)
-    d = clf.model.to_dict()
-    dict_accs = ev.sweep_under_flips(
-        d, 4, [0.0, 0.1], h, y, key, n_trials=2, kind="loghd",
-        predict_encoded=lambda m, hh: _predict_loghd_encoded(m, hh, "l2"))
-    np.testing.assert_allclose(typed, dict_accs, atol=1e-6)
+    default = ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key,
+                                   n_trials=2)
+    overridden = ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key,
+                                      n_trials=2,
+                                      predict_encoded=_override_predict)
+    np.testing.assert_allclose(default, overridden, atol=1e-6)
 
 
 def test_sweep_validates_args():
     clf, h, y = _fitted()
-    with pytest.raises(ValueError):
+    with pytest.raises(TypeError, match="migration"):
         ev.sweep_under_flips(clf.model.to_dict(), 4, [0.1], h, y,
                              jax.random.PRNGKey(0))
+    with pytest.raises(TypeError, match="migration"):
+        ev.accuracy(clf.model.to_dict(), h, y)
     with pytest.raises(ValueError):
         ev.sweep_under_flips(clf.model, 4, [0.1], h, y,
                              jax.random.PRNGKey(0), n_trials=0)
@@ -211,63 +218,67 @@ def test_corrupt_materialize_kernel_path_fully_materializes(scope):
             np.asarray(getattr(clean_jnp, name)))
 
 
-# ------------------------------------------------------------ deprecation --
+# -------------------------------------- dict-API deletion (step 2 of 2) ---
 
-def test_dict_api_wrappers_warn():
-    from repro.core import evaluate as evmod
-    from repro.core.hybrid import predict_hybrid_encoded
-    from repro.core.loghd import predict_loghd_encoded
-    from repro.core.sparsehd import predict_sparsehd_encoded
-    clf, h, y = _fitted()
-    d = clf.model.to_dict()
-    with pytest.warns(DictAPIDeprecationWarning):
-        evmod.quantize_stored(d, "loghd", 4)
-    with pytest.warns(DictAPIDeprecationWarning):
-        _ = evmod.STORED_LEAVES
-    with pytest.warns(DictAPIDeprecationWarning):
-        predict_loghd_encoded(d, h)
-    sp, hh, _ = _fitted("sparsehd", sparsity=0.5, retrain_epochs=2)
-    with pytest.warns(DictAPIDeprecationWarning):
-        predict_sparsehd_encoded(sp.model.to_dict(), hh)
-    hy, hh2, _ = _fitted("hybrid", sparsity=0.5, k=2, extra_bundles=2,
-                         refine_epochs=2)
-    with pytest.warns(DictAPIDeprecationWarning):
-        predict_hybrid_encoded(hy.model.to_dict(), hh2)
+# every raw-dict entry point deleted in deprecation step 2, by module
+_DELETED = {
+    "repro.core.loghd": ("fit_loghd", "predict_loghd",
+                         "predict_loghd_encoded", "loghd_model_bits",
+                         "_fit_loghd", "_predict_loghd",
+                         "_predict_loghd_encoded"),
+    "repro.core.sparsehd": ("fit_sparsehd", "predict_sparsehd",
+                            "predict_sparsehd_encoded",
+                            "sparsehd_memory_bits", "_fit_sparsehd"),
+    "repro.core.hybrid": ("fit_hybrid", "predict_hybrid",
+                          "predict_hybrid_encoded", "hybrid_memory_bits",
+                          "_fit_hybrid"),
+    "repro.hdc.conventional": ("fit_conventional", "predict_conventional",
+                               "_fit_conventional"),
+    "repro.core.evaluate": ("STORED_LEAVES", "quantize_stored",
+                            "_STORED_LEAVES"),
+    "repro.deprecation": ("DictAPIDeprecationWarning", "warn_dict_api"),
+}
 
 
-def test_deprecated_fit_wrappers_warn():
-    from repro.core.loghd import LogHDConfig, fit_loghd
-    key = jax.random.PRNGKey(0)
-    y = jnp.repeat(jnp.arange(C), 10)
-    x = jax.random.normal(key, (len(y), F))
-    from repro.hdc.encoders import EncoderConfig
-    cfg = LogHDConfig(n_classes=C, k=2, extra_bundles=1, refine_epochs=0)
-    with pytest.warns(DictAPIDeprecationWarning):
-        fit_loghd(cfg, EncoderConfig(F, 128, "cos"), x, y)
+def test_deleted_names_are_gone():
+    """The deleted surface must not linger under any name — a module
+    ``__getattr__`` shim resurrecting it would defeat the removal."""
+    import importlib
+    for mod_name, names in _DELETED.items():
+        mod = importlib.import_module(mod_name)
+        for name in names:
+            with pytest.raises(AttributeError):
+                getattr(mod, name)
 
 
-def test_typed_path_triggers_no_dict_deprecations():
-    """The in-repo hot path — typed fit, predict, sweep — must be silent:
-    step 2 of the removal plan depends on it."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DictAPIDeprecationWarning)
-        clf, h, y = _fitted()
-        clf.predict_encoded(h)
-        clf.accuracy(h, y)
-        ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y,
-                             jax.random.PRNGKey(3), n_trials=2)
-        ev.evaluate_under_flips(clf.model, None, 2, 0.05, None, h, y,
-                                jax.random.PRNGKey(4), 1)
-        clf.model.quantized(4).corrupted(
-            0.1, jax.random.PRNGKey(5)).materialized()
+def test_algorithm_modules_import_warning_free():
+    """A fresh interpreter must import every module that used to carry the
+    warning wrappers without any warning originating from repro code — no
+    residual deprecation machinery fires at import time.  (Scoped to
+    ``repro`` files so dependency deprecations can't flake this.)"""
+    code = (
+        "import sys, warnings\n"
+        "with warnings.catch_warnings(record=True) as caught:\n"
+        "    warnings.simplefilter('always')\n"
+        "    import repro.core.loghd, repro.core.sparsehd\n"
+        "    import repro.core.hybrid, repro.hdc.conventional\n"
+        "    import repro.core.evaluate, repro.deprecation, repro.api\n"
+        "bad = [w for w in caught if 'repro' in (w.filename or '')]\n"
+        "for w in bad:\n"
+        "    print(w.category.__name__, w.filename, w.message)\n"
+        "sys.exit(1 if bad else 0)\n")
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, env=env,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
 
 
-def test_benchmark_modules_import_without_dict_deprecations():
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DictAPIDeprecationWarning)
-        import benchmarks.breakpoints          # noqa: F401
-        import benchmarks.fault_sweep_bench    # noqa: F401
-        import benchmarks.fig3_bitflip         # noqa: F401
-        import benchmarks.fig4_dim_quant       # noqa: F401
-        import benchmarks.fig5_alphabet        # noqa: F401
-        import benchmarks.fig6_hybrid          # noqa: F401
+def test_benchmark_modules_still_import():
+    import benchmarks.breakpoints          # noqa: F401
+    import benchmarks.fault_sweep_bench    # noqa: F401
+    import benchmarks.fig3_bitflip         # noqa: F401
+    import benchmarks.fig4_dim_quant       # noqa: F401
+    import benchmarks.fig5_alphabet        # noqa: F401
+    import benchmarks.fig6_hybrid          # noqa: F401

@@ -1,21 +1,16 @@
 """End-to-end behaviour tests for the paper's system: the full LogHD
 pipeline (encode -> prototypes -> codebook -> bundles -> profiles ->
-refine -> decode) against the paper's own claims, on a small surrogate."""
+refine -> decode) against the paper's own claims, on a small surrogate,
+driven entirely through the typed estimator API."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import make_classifier
 from repro.core.evaluate import accuracy, evaluate_under_flips
-
-# this module deliberately exercises the deprecated raw-dict backend
-pytestmark = pytest.mark.filterwarnings(
-    "ignore::repro.deprecation.DictAPIDeprecationWarning")
-from repro.core.loghd import (LogHDConfig, fit_loghd, memory_bits,
-                              predict_loghd_encoded)
-from repro.core.sparsehd import (SparseHDConfig, fit_sparsehd,
-                                 predict_sparsehd_encoded)
+from repro.core.loghd import memory_bits
 from repro.data.synth import load_dataset
 from repro.hdc.conventional import class_prototypes, predict_from_encoded
 from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
@@ -34,6 +29,13 @@ def isolet_small():
                 y_te=np.asarray(y_te), protos=protos)
 
 
+def _fit_loghd_clf(fx, **kw):
+    clf = make_classifier("loghd", fx["spec"].n_classes,
+                          enc_cfg=fx["enc_cfg"], **kw)
+    return clf.fit(fx["x_tr"], fx["y_tr"], prototypes=fx["protos"],
+                   enc=fx["enc"], encoded=fx["h_tr"])
+
+
 def test_conventional_accuracy_in_paper_regime(isolet_small):
     fx = isolet_small
     acc = float(jnp.mean(predict_from_encoded(fx["protos"], fx["h_te"])
@@ -47,33 +49,24 @@ def test_loghd_competitive_at_log_memory(isolet_small):
     c, d = fx["spec"].n_classes, 4096
     conv = float(jnp.mean(predict_from_encoded(fx["protos"], fx["h_te"])
                           == fx["y_te"]))
-    cfg = LogHDConfig(n_classes=c, k=2, extra_bundles=5, refine_epochs=30,
-                      codebook_method="distance")
-    model = fit_loghd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                      prototypes=fx["protos"], enc=fx["enc"],
-                      encoded=fx["h_tr"])
-    acc = accuracy(predict_loghd_encoded, model, fx["h_te"], fx["y_te"])
+    clf = _fit_loghd_clf(fx, k=2, extra_bundles=5, refine_epochs=30,
+                         codebook_method="distance")
+    acc = accuracy(clf.model, fx["h_te"], fx["y_te"])
     assert acc > conv - 0.10, (acc, conv)
-    assert memory_bits(c, d, cfg.n_bundles, 32) < 0.45 * c * d * 32
+    assert memory_bits(c, d, clf.cfg.n_bundles, 32) < 0.45 * c * d * 32
 
 
 def test_bundle_flip_robustness_mechanism(isolet_small):
     """The D-preservation mechanism: 1-bit bundles under p=0.2 flips (bulk
     scope) keep >=80% of clean accuracy."""
     fx = isolet_small
-    c = fx["spec"].n_classes
-    cfg = LogHDConfig(n_classes=c, k=2, extra_bundles=5, refine_epochs=30,
-                      codebook_method="distance")
-    model = fit_loghd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                      prototypes=fx["protos"], enc=fx["enc"],
-                      encoded=fx["h_tr"])
+    clf = _fit_loghd_clf(fx, k=2, extra_bundles=5, refine_epochs=30,
+                         codebook_method="distance")
     key = jax.random.PRNGKey(0)
-    clean = evaluate_under_flips(model, "loghd", 1, 0.0,
-                                 predict_loghd_encoded, fx["h_te"],
-                                 fx["y_te"], key, 1, "hv")
-    noisy = evaluate_under_flips(model, "loghd", 1, 0.2,
-                                 predict_loghd_encoded, fx["h_te"],
-                                 fx["y_te"], key, 2, "hv")
+    clean = evaluate_under_flips(clf.model, 1, 0.0, fx["h_te"], fx["y_te"],
+                                 key, 1, "hv")
+    noisy = evaluate_under_flips(clf.model, 1, 0.2, fx["h_te"], fx["y_te"],
+                                 key, 2, "hv")
     assert noisy >= 0.8 * clean, (clean, noisy)
 
 
@@ -81,28 +74,23 @@ def test_distance_codebook_improves_all_scope_robustness(isolet_small):
     """Beyond-paper claim: max-min-distance codebooks don't lose to the
     load-only greedy under full-scope flips at matched everything."""
     fx = isolet_small
-    c = fx["spec"].n_classes
     key = jax.random.PRNGKey(1)
     accs = {}
     for method in ("greedy", "distance"):
-        cfg = LogHDConfig(n_classes=c, k=2, extra_bundles=5,
-                          refine_epochs=30, codebook_method=method)
-        m = fit_loghd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                      prototypes=fx["protos"], enc=fx["enc"],
-                      encoded=fx["h_tr"])
-        accs[method] = evaluate_under_flips(
-            m, "loghd", 1, 0.1, predict_loghd_encoded, fx["h_te"],
-            fx["y_te"], key, 3, "all")
+        clf = _fit_loghd_clf(fx, k=2, extra_bundles=5, refine_epochs=30,
+                             codebook_method=method)
+        accs[method] = evaluate_under_flips(clf.model, 1, 0.1, fx["h_te"],
+                                            fx["y_te"], key, 3, "all")
     assert accs["distance"] >= accs["greedy"] - 0.02, accs
 
 
 def test_sparsehd_baseline_works(isolet_small):
     fx = isolet_small
-    c = fx["spec"].n_classes
-    cfg = SparseHDConfig(n_classes=c, sparsity=0.6, retrain_epochs=15)
-    m = fit_sparsehd(cfg, fx["enc_cfg"], fx["x_tr"], fx["y_tr"],
-                     prototypes=fx["protos"], enc=fx["enc"],
-                     encoded=fx["h_tr"])
-    acc = accuracy(predict_sparsehd_encoded, m, fx["h_te"], fx["y_te"])
+    clf = make_classifier("sparsehd", fx["spec"].n_classes,
+                          enc_cfg=fx["enc_cfg"], sparsity=0.6,
+                          retrain_epochs=15)
+    clf = clf.fit(fx["x_tr"], fx["y_tr"], prototypes=fx["protos"],
+                  enc=fx["enc"], encoded=fx["h_tr"])
+    acc = accuracy(clf.model, fx["h_te"], fx["y_te"])
     assert acc > 0.8
-    assert m["protos"].shape[1] == int(0.4 * 4096)
+    assert clf.model.protos.shape[1] == int(0.4 * 4096)
