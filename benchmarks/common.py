@@ -38,8 +38,8 @@ def dataset_fixture(name: str, dim: int = D_DEFAULT):
     protos = class_prototypes(h_tr, jnp.asarray(y_tr), spec.n_classes)
     return {"spec": spec, "enc_cfg": enc_cfg, "enc": enc,
             "x_tr": jnp.asarray(x_tr), "y_tr": jnp.asarray(y_tr),
-            "h_tr": h_tr, "h_te": h_te, "y_te": np.asarray(y_te),
-            "protos": protos}
+            "h_tr": h_tr, "x_te": jnp.asarray(x_te), "h_te": h_te,
+            "y_te": np.asarray(y_te), "protos": protos}
 
 
 def _fit_shared(clf: HDClassifier, fx, **kw) -> HDClassifier:

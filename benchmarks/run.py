@@ -9,6 +9,10 @@
   fault_sweep_bench  — fused sweep engine vs frozen legacy per-trial loop;
                        appends a perf-trajectory record to
                        BENCH_fault_sweep.json at the repo root
+  serve_bench        — continuous-batched classifier service vs naive
+                       one-request-per-call (conventional vs LogHD at
+                       matched memory); appends p50/p99 latency and
+                       requests/sec to BENCH_serve.json
 
 `python -m benchmarks.run` (or `--quick`) runs the QUICK suite (the 1-core
 CPU container cannot finish the full grids in reasonable time); `--full`
@@ -35,11 +39,12 @@ def main() -> None:
 
     from benchmarks import (fault_sweep_bench, fig3_bitflip, fig4_dim_quant,
                             fig5_alphabet, fig6_hybrid, kernels_bench,
-                            table2_efficiency)
+                            serve_bench, table2_efficiency)
     suites = {
         "table2": table2_efficiency,
         "kernels": kernels_bench,
         "fault_sweep": fault_sweep_bench,
+        "serve": serve_bench,
         "fig5": fig5_alphabet,
         "fig4": fig4_dim_quant,
         "fig6": fig6_hybrid,

@@ -26,7 +26,7 @@ def make_data(c=4096, f=256, d_per_class=24, n_test=2048, seed=0):
     rng = np.random.default_rng(seed)
     dirs = rng.standard_normal((c, f)).astype(np.float32)
     dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
-    y_tr = np.repeat(np.arange(c), d_per_class // 8)
+    y_tr = np.repeat(np.arange(c), d_per_class)
     x_tr = dirs[y_tr] * 2.0 + rng.standard_normal(
         (len(y_tr), f)).astype(np.float32) * (1.0 / np.sqrt(f))
     y_te = rng.integers(0, c, n_test)

@@ -32,7 +32,7 @@ from repro.kernels.profile_decode.ops import profile_decode_scores
 
 __all__ = ["kernels_qualify", "predict_fn", "predict_encoded",
            "loghd_head_scores", "corrupt_dequant", "corrupt_materialize",
-           "clear_cache"]
+           "register_cache_clearer", "clear_cache"]
 
 
 def _l2n(v, axis=-1, eps=1e-12):
@@ -168,9 +168,35 @@ def corrupt_materialize(model: HDModel, p, key: jax.Array,
     return type(model).from_dict(out, **aux)
 
 
+# Downstream layers (repro.serving's bucketed jit caches) register their
+# clearers here so that clear_cache() stays the ONE invalidation entry point
+# without dispatch importing upward.
+_EXTRA_CACHE_CLEARERS: list = []
+
+
+def register_cache_clearer(fn: Callable[[], None]) -> Callable[[], None]:
+    """Register a zero-arg callback to run on every ``clear_cache()``.
+
+    Layers that build their own compiled-executable caches on top of
+    ``predict_fn`` (e.g. ``repro.serving``'s shape-bucketed caches) register
+    here at import time, preserving the invariant that ``clear_cache()``
+    invalidates *every* cached executable in the process."""
+    if fn not in _EXTRA_CACHE_CLEARERS:
+        _EXTRA_CACHE_CLEARERS.append(fn)
+    return fn
+
+
 def clear_cache() -> None:
-    """Drop all cached compiled predict/sweep executables (tests /
-    notebooks), including core.evaluate's module-wide caches."""
+    """Drop every cached compiled predict/sweep executable in the process.
+
+    This is the single cache-invalidation entry point.  Invariant: after
+    ``clear_cache()`` no layer holds a stale compiled executable — it clears
+    the per-family ``_predict_jit`` cache, ``core.evaluate``'s module-wide
+    predict/sweep caches, and every cache registered through
+    ``register_cache_clearer`` (the serving layer's shape-bucketed jit
+    caches register themselves on import)."""
     from repro.core.evaluate import clear_caches
     _predict_jit.cache_clear()
     clear_caches()
+    for fn in list(_EXTRA_CACHE_CLEARERS):
+        fn()

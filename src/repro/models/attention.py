@@ -245,32 +245,35 @@ def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype):
 
 def decode_attention(params: dict, cfg: AttnConfig, x: jax.Array,
                      cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
-    """One-token decode step.  x: (B, 1, D), pos: scalar int32 (current
-    position, same for the whole batch).  Returns (out (B,1,D), new cache).
+    """One-token decode step.  x: (B, 1, D), pos: scalar int32 or (B,)
+    int32 per-slot positions (continuous batching steps every slot at its
+    own position).  Returns (out (B,1,D), new cache).
 
     Local layers keep a ring buffer of the last `window` entries; global
-    layers append at `pos`."""
+    layers append at each slot's `pos`."""
     b = x.shape[0]
-    q, k, v = _qkv(params, cfg, x, jnp.full((b, 1), pos, jnp.int32))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _qkv(params, cfg, x, pos[:, None])
     length = cache["k"].shape[1]
     if cfg.window is not None:
         slot = jnp.mod(pos, length)          # ring buffer
     else:
         slot = jnp.minimum(pos, length - 1)
-    ck = cache["k"].at[:, slot].set(k[:, 0])
-    cv = cache["v"].at[:, slot].set(v[:, 0])
-    # valid-key mask
-    idx = jnp.arange(length)
+    ck = cache["k"].at[jnp.arange(b), slot].set(k[:, 0])
+    cv = cache["v"].at[jnp.arange(b), slot].set(v[:, 0])
+    # valid-key mask, per slot: (B, T)
+    idx = jnp.arange(length)[None, :]
     if cfg.window is not None:
-        valid = (idx <= jnp.minimum(pos, length - 1)) | (pos >= length)
+        valid = ((idx <= jnp.minimum(pos, length - 1)[:, None])
+                 | (pos[:, None] >= length))
     else:
-        valid = idx <= pos
+        valid = idx <= pos[:, None]
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     groups = h // kvh
     qg = q.reshape(b, 1, kvh, groups, hd)
     logits = jnp.einsum("bskgd,btkd->bkgst", qg, ck).astype(jnp.float32)
     logits *= 1.0 / np.sqrt(hd)
-    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", probs, cv).reshape(b, 1, h * hd)
     return out @ params["wo"], {"k": ck, "v": cv}

@@ -109,15 +109,19 @@ def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int, dtype):
 
 def decode_mla(params: dict, cfg: MLAConfig, x: jax.Array, cache: dict,
                pos: jax.Array) -> tuple[jax.Array, dict]:
-    """Absorbed-matrix one-token decode over the compressed cache."""
+    """Absorbed-matrix one-token decode over the compressed cache.
+
+    ``pos`` is a scalar int32 or (B,) int32 per-slot positions (continuous
+    batching steps every slot at its own position)."""
     b = x.shape[0]
     h = cfg.n_heads
-    positions = jnp.full((b, 1), pos, jnp.int32)
-    q_nope, q_rope, c_kv_new, k_rope_new = _project(params, cfg, x, positions)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q_nope, q_rope, c_kv_new, k_rope_new = _project(params, cfg, x,
+                                                    pos[:, None])
     length = cache["c_kv"].shape[1]
     slot = jnp.minimum(pos, length - 1)
-    c_kv = cache["c_kv"].at[:, slot].set(c_kv_new[:, 0])
-    k_rope = cache["k_rope"].at[:, slot].set(k_rope_new[:, 0])
+    c_kv = cache["c_kv"].at[jnp.arange(b), slot].set(c_kv_new[:, 0])
+    k_rope = cache["k_rope"].at[jnp.arange(b), slot].set(k_rope_new[:, 0])
 
     kvb = params["wkv_b"].reshape(cfg.kv_lora, h, cfg.nope_dim + cfg.v_dim)
     wk, wv = kvb[..., :cfg.nope_dim], kvb[..., cfg.nope_dim:]
@@ -127,8 +131,8 @@ def decode_mla(params: dict, cfg: MLAConfig, x: jax.Array, cache: dict,
     logits = (jnp.einsum("bshc,btc->bhst", q_c, c_kv)
               + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
               ).astype(jnp.float32) * scale
-    valid = jnp.arange(length) <= pos
-    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    valid = jnp.arange(length)[None, :] <= pos[:, None]      # (B, T)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bhst,btc->bshc", probs.astype(c_kv.dtype), c_kv)
     out = jnp.einsum("bshc,chd->bshd", ctx, wv).reshape(b, 1, h * cfg.v_dim)

@@ -362,7 +362,9 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict,
                 tokens: jax.Array, pos: jax.Array,
                 mesh: Optional[Mesh] = None, *, seq_sharded: bool = False,
                 embeddings: Optional[jax.Array] = None):
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32.
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 or (B,)
+    int32 per-slot positions (continuous batching steps every slot at its
+    own position; seq-sharded decode still requires a scalar).
     Returns (logits (B, 1, V), new state)."""
     from repro.models.sharding import set_context_mesh
     set_context_mesh(mesh)

@@ -58,7 +58,11 @@ def run_serving(cfg: ModelConfig, params, requests: list[Request],
     def admit(slot: int):
         """Prefill a slot from the queue (token-by-token teacher forcing —
         exercises exactly the decode path; batched prefill is the
-        prefill_32k dry-run shape)."""
+        prefill_32k dry-run shape).  Other slots are stepped alongside at
+        their own (unchanged) positions: re-encoding a slot's current token
+        at its current position writes the same cache entry it will write
+        on its next real step, so prefilling one slot never perturbs the
+        others."""
         nonlocal state, cur
         req = queue.pop(0)
         active[slot] = req
@@ -66,8 +70,10 @@ def run_serving(cfg: ModelConfig, params, requests: list[Request],
         logits = None
         for t, tok in enumerate(req.prompt):
             tok_b = jnp.asarray(cur).at[slot, 0].set(int(tok))
+            pos_t = pos.copy()
+            pos_t[slot] = t
             logits, state = step_jit(params, state, tok_b,
-                                     jnp.asarray(t, jnp.int32))
+                                     jnp.asarray(pos_t, jnp.int32))
         if logits is not None:
             cur[slot, 0] = int(jnp.argmax(logits[slot, 0]))
             outputs[req.uid].append(int(cur[slot, 0]))
@@ -80,16 +86,15 @@ def run_serving(cfg: ModelConfig, params, requests: list[Request],
         pos[slot] = len(req.prompt)
         progress[slot] = 0
 
-    # NOTE: single shared `pos` per step keeps the loop simple (slots are
-    # stepped at the max position); production serving would track per-slot
-    # positions with paged caches.
+    # Per-slot positions: every slot decodes at its own `pos` (mixed-length
+    # prompts stay position-correct), the way production continuous
+    # batching tracks per-sequence offsets into paged caches.
     while queue or any(a is not None for a in active):
         for slot in range(b):
             if active[slot] is None and queue:
                 admit(slot)
-        step_pos = int(pos.max()) if pos.max() > 0 else 0
         logits, state = step_jit(params, state, jnp.asarray(cur),
-                                 jnp.asarray(step_pos, jnp.int32))
+                                 jnp.asarray(pos, jnp.int32))
         if serve.temperature > 0:
             key, sub = jax.random.split(key)
             nxt = jax.random.categorical(sub, logits[:, 0] / serve.temperature)

@@ -1,0 +1,52 @@
+"""repro.serving — the classifier inference service (the ROADMAP's
+"millions of users" artifact, made measurable).
+
+The eval path (``repro.api`` + the sweep engine) answers "how accurate and
+how robust"; this package answers "how many requests per second at what
+latency".  It serves the typed classifier models behind a request queue,
+the way ``runtime/serve_loop.py`` serves the LM — continuous batching,
+fixed slot budget, device-resident state — specialized to one-shot
+classify requests.
+
+Module map
+----------
+  queue.py      ``PredictRequest``/``PredictFuture``/``RequestQueue``:
+                FIFO arrival order, grouped slot admission (up to
+                ``max_batch`` requests for one model per cycle), futures
+                bound to rows of the async batched device result.
+  buckets.py    ``BucketedPredict``: the shape-bucketed jit cache over
+                ``api.dispatch.predict_fn`` — batches pad up to a fixed
+                bucket ladder so mixed batch sizes compile at most one
+                executable per (model family, bucket).  Registers with
+                ``api.dispatch.clear_cache`` (single invalidation point).
+  service.py    ``ClassifierService``: multi-model registry (device_put at
+                registration), encode -> bucketed predict service cycles,
+                non-blocking dispatch.
+  loadgen.py    open-loop Poisson + closed-loop saturation load shapes;
+                p50/p99 latency and requests/sec (``LoadResult``).
+
+Quick start (runnable — docs/api.md has the doctested tour):
+
+    from repro.serving import ClassifierService
+    svc = ClassifierService({"loghd": clf.model}, max_batch=64)
+    fut = svc.submit("loghd", x_row)
+    svc.run_until_drained()
+    label = fut.result()
+
+``benchmarks/serve_bench.py`` drives this package for the CI-gated
+latency/throughput record (``BENCH_serve.json``): batched service vs a
+naive one-request-per-call baseline, conventional vs LogHD at matched
+memory.
+"""
+
+from repro.serving.buckets import BucketedPredict, bucket_sizes
+from repro.serving.loadgen import LoadResult, closed_loop, open_loop_poisson
+from repro.serving.queue import PredictFuture, PredictRequest, RequestQueue
+from repro.serving.service import ClassifierService
+
+__all__ = [
+    "ClassifierService",
+    "BucketedPredict", "bucket_sizes",
+    "RequestQueue", "PredictRequest", "PredictFuture",
+    "LoadResult", "closed_loop", "open_loop_poisson",
+]

@@ -1,0 +1,113 @@
+"""Load generation for the classifier service: open-loop Poisson arrivals
+and closed-loop saturation, with p50/p99 latency + requests/sec accounting.
+
+Two canonical load shapes (the serving-benchmark literature's pair):
+
+  * **closed-loop saturation** — every request is queued up front and the
+    driver cycles the service flat out.  Latency is dominated by queueing;
+    the number that matters is requests/sec at saturation (the ASIC-claim
+    proxy: requests/sec per chip).
+  * **open-loop Poisson** — arrivals are scheduled by an exponential
+    inter-arrival clock *independent of service progress*, so queue growth
+    under overload is visible instead of self-throttled.  Latency is
+    completion minus *scheduled* arrival, the honest open-loop definition.
+
+Both return a ``LoadResult``; ``benchmarks/serve_bench.py`` records these
+into ``BENCH_serve.json`` next to the naive one-request-per-call baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.serving.service import ClassifierService
+
+__all__ = ["LoadResult", "closed_loop", "open_loop_poisson"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadResult:
+    """One load-generation run's summary (times in seconds/ms as named)."""
+    mode: str
+    n_requests: int
+    wall_s: float
+    rps: float                  # completed requests per second of wall clock
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+    max_ms: float
+
+    def to_record(self) -> dict:
+        return {k: (round(v, 4) if isinstance(v, float) else v)
+                for k, v in dataclasses.asdict(self).items()}
+
+
+def _summarize(mode: str, latencies_s: np.ndarray, wall_s: float
+               ) -> LoadResult:
+    lat_ms = np.asarray(latencies_s, np.float64) * 1e3
+    return LoadResult(
+        mode=mode, n_requests=int(lat_ms.size), wall_s=float(wall_s),
+        rps=float(lat_ms.size / max(wall_s, 1e-9)),
+        p50_ms=float(np.percentile(lat_ms, 50)),
+        p99_ms=float(np.percentile(lat_ms, 99)),
+        mean_ms=float(lat_ms.mean()), max_ms=float(lat_ms.max()))
+
+
+def closed_loop(service: ClassifierService, model_name: str, xs,
+                *, encoded: bool = False) -> LoadResult:
+    """Saturation mode: queue everything, cycle flat out, drain in arrival
+    order.  Dispatch stays non-blocking — the device pipeline fills with
+    batched executions while the host assembles the next cycle — and the
+    drain forces transfers in arrival order afterwards."""
+    xs = np.asarray(xs)
+    t_start = service.now()
+    for x in xs:
+        service.submit(model_name, x, encoded=encoded, t_arrival=t_start)
+    dispatched = []
+    while len(service.queue):
+        dispatched.extend(service.step())
+    lat = []
+    for req in dispatched:                       # arrival order (FIFO admit)
+        req.future.result()
+        lat.append(service.now() - req.t_arrival)
+    wall = service.now() - t_start
+    return _summarize("closed_loop", np.asarray(lat), wall)
+
+
+def open_loop_poisson(service: ClassifierService, model_name: str, xs,
+                      *, rate_rps: float, n_requests: int, seed: int = 0,
+                      encoded: bool = False) -> LoadResult:
+    """Open-loop mode: Poisson arrivals at ``rate_rps``, latency measured
+    against the *scheduled* arrival time (queueing under overload counts)."""
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be > 0")
+    xs = np.asarray(xs)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
+    t_start = service.now()
+    completions: dict[int, float] = {}
+    i = 0
+    while i < n_requests or len(service.queue):
+        now = service.now() - t_start
+        while i < n_requests and arrivals[i] <= now:
+            service.submit(model_name, xs[i % len(xs)], encoded=encoded,
+                           t_arrival=t_start + arrivals[i])
+            i += 1
+        batch = service.step()
+        if batch:
+            jax.block_until_ready(batch[-1].future._batch)
+            t_done = service.now()
+            for req in batch:
+                req.future.result()
+                completions[req.uid] = t_done - req.t_arrival
+        elif i < n_requests:
+            # idle until the next scheduled arrival (open loop: do NOT
+            # fast-forward the clock — the rate is the experiment)
+            time.sleep(max(min(arrivals[i] - now, 1e-3), 0.0))
+    wall = service.now() - t_start
+    lat = np.asarray([completions[uid] for uid in sorted(completions)])
+    return _summarize("open_loop_poisson", lat, wall)

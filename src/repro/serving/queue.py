@@ -1,0 +1,122 @@
+"""Request queue, result futures, and the slot-admission scheduler.
+
+The shape is ``runtime/serve_loop.py``'s continuous-batching loop adapted to
+one-shot classify traffic: LM serving keeps a fixed batch of decode *slots*
+and refills them as sequences finish; classifier serving has no multi-step
+sequences, so a "slot" lives for exactly one service cycle — each cycle the
+scheduler admits up to ``max_batch`` queued requests into the batch being
+assembled, dispatches them together, and every slot is immediately
+recyclable.  What carries over from the LM loop is the admission discipline:
+FIFO arrival order, a fixed slot budget per cycle, and grouping the batch by
+model so one compiled executable serves it.
+
+Futures are bound to rows of the batched (async) device result — binding
+does not block; ``result()`` forces the transfer.  Because admission is FIFO
+and binding happens at dispatch, draining futures in arrival order never
+waits on a request admitted later.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Iterator, Optional
+
+import numpy as np
+
+__all__ = ["PredictRequest", "PredictFuture", "RequestQueue"]
+
+
+class PredictFuture:
+    """Result handle for one submitted request.
+
+    ``done()`` is True once the request's batch has been dispatched (the
+    label may still be in flight on device — dispatch is async).
+    ``result()`` forces the device transfer and returns the int label.
+    """
+
+    __slots__ = ("_batch", "_row", "_resolved")
+
+    def __init__(self):
+        self._batch = None
+        self._row = -1
+        self._resolved: Optional[int] = None
+
+    def _bind(self, batch_labels, row: int) -> None:
+        self._batch = batch_labels
+        self._row = row
+
+    def done(self) -> bool:
+        return self._resolved is not None or self._batch is not None
+
+    def result(self) -> int:
+        if self._resolved is None:
+            if self._batch is None:
+                raise RuntimeError("request not dispatched yet — drive the "
+                                   "service (step()/run_until_drained())")
+            self._resolved = int(np.asarray(self._batch)[self._row])
+            self._batch = None               # drop the device ref
+        return self._resolved
+
+
+@dataclasses.dataclass
+class PredictRequest:
+    """One classify request: raw features (or a pre-encoded hypervector)."""
+    uid: int
+    model_name: str
+    x: np.ndarray                 # (F,) raw features or (D,) encoded
+    encoded: bool = False         # x is already phi(x)
+    t_arrival: float = 0.0        # load-gen timestamp (service-clock seconds)
+    future: PredictFuture = dataclasses.field(default_factory=PredictFuture)
+
+
+class RequestQueue:
+    """FIFO queue with grouped slot admission.
+
+    ``admit(max_batch)`` pops the next service cycle's batch: the request at
+    the head fixes the model, then up to ``max_batch`` requests *for that
+    model* are gathered in arrival order (requests for other models keep
+    their relative order for the next cycle).  This is the serve-loop slot
+    rule — never over-admit, never reorder within a model — specialized to
+    batches that live for one cycle.
+    """
+
+    def __init__(self):
+        self._q: collections.deque[PredictRequest] = collections.deque()
+        self._uids = itertools.count()
+        self.admitted = 0
+        self.cycles = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self) -> Iterator[PredictRequest]:
+        return iter(self._q)
+
+    def next_uid(self) -> int:
+        return next(self._uids)
+
+    def push(self, req: PredictRequest) -> PredictFuture:
+        self._q.append(req)
+        return req.future
+
+    def admit(self, max_batch: int) -> list[PredictRequest]:
+        """Pop the next cycle's batch (possibly empty)."""
+        if not self._q:
+            return []
+        # one executable serves the cycle: group on (model, input form)
+        group = (self._q[0].model_name, self._q[0].encoded)
+        batch: list[PredictRequest] = []
+        keep: collections.deque[PredictRequest] = collections.deque()
+        while self._q:
+            req = self._q.popleft()
+            if (req.model_name, req.encoded) == group and \
+                    len(batch) < max_batch:
+                batch.append(req)
+            else:
+                keep.append(req)
+        self._q = keep
+        self.admitted += len(batch)
+        self.cycles += 1
+        return batch

@@ -1,0 +1,182 @@
+"""The classifier inference service: device-resident models behind a queue.
+
+``ClassifierService`` is the serving counterpart of the eval path: a
+multi-model registry (conventional and LogHD at matched memory serve side
+by side), each model ``jax.device_put`` once at registration, a FIFO
+request queue with grouped slot admission (``serving/queue.py``), and a
+shape-bucketed jit cache (``serving/buckets.py``) so mixed batch sizes
+compile at most one executable per (family, bucket).
+
+One service cycle (``step()``):
+
+    admit up to max_batch queued requests for the head-of-queue model
+    stack features -> pad to the batch's bucket -> encode (phi is jit per
+      bucket shape too, so the encoder never retraces either)
+    bucketed predict through api.dispatch.predict_fn
+    bind each request's future to its row of the async device result
+
+Dispatch is non-blocking: ``step()`` returns as soon as the batch is
+enqueued on device; futures force the transfer on ``result()``.  Because
+admission is FIFO, draining futures in arrival order never blocks on a
+later-admitted request.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.models import HDModel
+from repro.hdc.encoders import encode
+from repro.serving.buckets import BucketedPredict
+from repro.serving.queue import PredictFuture, PredictRequest, RequestQueue
+
+__all__ = ["ClassifierService"]
+
+_encode_jit = jax.jit(encode, static_argnames="kind")
+
+
+class ClassifierService:
+    """Continuous-batched predict service over the typed classifier API.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.api import make_classifier
+    >>> x = jax.random.normal(jax.random.PRNGKey(0), (60, 8))
+    >>> y = jnp.arange(60) % 3
+    >>> clf = make_classifier("conventional", n_classes=3, in_features=8,
+    ...                       dim=128).fit(x, y)
+    >>> svc = ClassifierService({"conv": clf.model}, max_batch=16)
+    >>> futs = [svc.submit("conv", x[i]) for i in range(5)]
+    >>> svc.run_until_drained()
+    5
+    >>> [f.result() for f in futs] == [int(v) for v in clf.predict(x[:5])]
+    True
+    """
+
+    def __init__(self, models: Optional[dict] = None, *,
+                 max_batch: int = 64, buckets: Optional[Sequence[int]] = None):
+        self.max_batch = int(max_batch)
+        self.bucket_cache = BucketedPredict(buckets=buckets,
+                                            max_batch=self.max_batch)
+        self.queue = RequestQueue()
+        self._models: dict[str, HDModel] = {}
+        self._t0 = time.perf_counter()
+        if models:
+            for name, model in models.items():
+                self.register(name, model)
+
+    # ----------------------------------------------------------- registry --
+    def register(self, name: str, model: HDModel) -> None:
+        """Add (or replace) a served model; moved device-resident once here,
+        never per request."""
+        if not isinstance(model, HDModel):
+            raise TypeError(f"served models are typed repro.api models, got "
+                            f"{type(model).__name__}")
+        self._models[name] = jax.device_put(model.materialized())
+
+    def model(self, name: str) -> HDModel:
+        try:
+            return self._models[name]
+        except KeyError:
+            raise KeyError(f"unknown served model {name!r}; registered: "
+                           f"{sorted(self._models)}") from None
+
+    def served_models(self) -> tuple[str, ...]:
+        return tuple(sorted(self._models))
+
+    # -------------------------------------------------------------- clock --
+    def now(self) -> float:
+        """Seconds since service start (the arrival/latency clock)."""
+        return time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------- warmup --
+    def warmup(self, model_names: Optional[Sequence[str]] = None) -> int:
+        """Precompile every (model, bucket) executable — encode and predict.
+
+        A service start-up step: after warmup, steady-state traffic never
+        pays a compile, whatever batch sizes the scheduler assembles (the
+        open-loop latency percentiles then measure serving, not tracing).
+        Returns the number of (model, bucket) pairs touched."""
+        pairs = 0
+        labels = None
+        for name in (model_names if model_names is not None
+                     else self.served_models()):
+            model = self.model(name)
+            n_feat = model.enc["proj"].shape[0]
+            for b in self.bucket_cache.buckets:
+                h = _encode_jit(model.enc,
+                                jnp.zeros((b, n_feat), jnp.float32),
+                                kind=model.encoder_kind)
+                labels = self.bucket_cache.predict(model, h)
+                pairs += 1
+        if labels is not None:
+            jax.block_until_ready(labels)
+        return pairs
+
+    # ------------------------------------------------------------- submit --
+    def submit(self, model_name: str, x, *, encoded: bool = False,
+               t_arrival: Optional[float] = None) -> PredictFuture:
+        """Enqueue one request; returns its future.
+
+        ``x`` is one feature vector (F,) — or one pre-encoded hypervector
+        (D,) with ``encoded=True``.  ``t_arrival`` (service-clock seconds)
+        lets open-loop load generators stamp the scheduled arrival."""
+        self.model(model_name)                      # fail fast on bad name
+        req = PredictRequest(
+            uid=self.queue.next_uid(), model_name=model_name,
+            x=np.asarray(x), encoded=bool(encoded),
+            t_arrival=self.now() if t_arrival is None else float(t_arrival))
+        self.queue.push(req)
+        return req.future
+
+    # --------------------------------------------------------------- step --
+    def step(self) -> list[PredictRequest]:
+        """Run one service cycle; returns the dispatched requests (empty if
+        the queue was empty).  Non-blocking: results stay on device."""
+        batch = self.queue.admit(self.max_batch)
+        if not batch:
+            return []
+        model = self.model(batch[0].model_name)
+        n = len(batch)
+        bucket = self.bucket_cache.bucket_for(n)
+        xs = np.stack([r.x for r in batch])
+        if n < bucket:                       # pad BEFORE encode so phi also
+            xs = np.concatenate(             # compiles once per bucket
+                [xs, np.zeros((bucket - n,) + xs.shape[1:], xs.dtype)])
+        if batch[0].encoded:
+            h = jnp.asarray(xs)
+        else:
+            h = _encode_jit(model.enc, jnp.asarray(xs),
+                            kind=model.encoder_kind)
+        labels = self.bucket_cache.predict(model, h)
+        for row, req in enumerate(batch):
+            req.future._bind(labels, row)
+        return batch
+
+    def run_until_drained(self, block: bool = False) -> int:
+        """Cycle until the queue is empty; returns requests dispatched.
+        With ``block=True`` also waits for the last device result."""
+        total = 0
+        labels = None
+        while len(self.queue):
+            batch = self.step()
+            total += len(batch)
+            if batch:
+                labels = batch[-1].future._batch
+        if block and labels is not None:
+            jax.block_until_ready(labels)
+        return total
+
+    # -------------------------------------------------------------- stats --
+    def stats(self) -> dict:
+        return {
+            "served_models": list(self.served_models()),
+            "admitted": self.queue.admitted,
+            "cycles": self.queue.cycles,
+            "queued": len(self.queue),
+            "bucket_cache": self.bucket_cache.snapshot(),
+        }

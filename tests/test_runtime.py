@@ -106,6 +106,31 @@ def test_serving_loop_end_to_end():
         assert all(0 <= t < 64 for t in toks)
 
 
+def test_serving_loop_mixed_prompt_lengths_position_correct():
+    """Per-slot positions: a slot decoding alongside a longer prompt must
+    produce exactly the tokens it produces when served alone (greedy).  The
+    historical loop stepped every active slot at pos.max(), so mixed-length
+    prompts decoded at wrong positions and this equivalence failed."""
+    from repro.models.model import init_params
+    from repro.runtime.serve_loop import Request, ServeLoopConfig, run_serving
+    cfg = dataclasses.replace(get_smoke_config("qwen3-1.7b"), vocab=64,
+                              d_model=32, n_heads=2, n_kv_heads=2,
+                              head_dim=16, d_ff=64, n_periods=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.arange(1, 3, dtype=np.int64),          # short
+               np.arange(5, 17, dtype=np.int64) % 64,    # long
+               np.arange(30, 34, dtype=np.int64)]        # medium
+    serve = ServeLoopConfig(batch_slots=2, max_new_tokens=5, max_len=64)
+    reqs = [Request(uid=i, prompt=p) for i, p in enumerate(prompts)]
+    batched = run_serving(cfg, params, reqs, serve)
+    for i, p in enumerate(prompts):
+        solo = run_serving(cfg, params, [Request(uid=i, prompt=p)],
+                           dataclasses.replace(serve, batch_slots=1))
+        np.testing.assert_array_equal(
+            batched[i], solo[i],
+            err_msg=f"slot for prompt {i} decoded at wrong positions")
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 50))
 def test_encoder_normalized_output(seed):

@@ -1,0 +1,248 @@
+"""Serving subsystem tests: queue admission order, bucket selection and
+padding correctness, jit-cache hit accounting across mixed batch sizes
+(the no-retrace-per-request contract), byte-identical predictions vs the
+direct dispatch path for every registered family, and the single
+cache-invalidation entry point."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import dispatch, make_classifier, predict_encoded
+from repro.hdc.encoders import encode_batched
+from repro.serving import (BucketedPredict, ClassifierService, PredictFuture,
+                           PredictRequest, RequestQueue, bucket_sizes,
+                           closed_loop, open_loop_poisson)
+
+C, F, D = 5, 12, 256
+
+METHOD_KW = {
+    "conventional": {},
+    "sparsehd": dict(sparsity=0.5, retrain_epochs=2),
+    "loghd": dict(k=2, extra_bundles=1, refine_epochs=2),
+    "hybrid": dict(sparsity=0.5, k=2, extra_bundles=1, refine_epochs=2),
+}
+
+
+@functools.lru_cache(maxsize=1)
+def _data():
+    key = jax.random.PRNGKey(0)
+    dirs = jax.random.normal(key, (C, F))
+    y = jnp.arange(90) % C
+    x = dirs[y] * 2.0 + jax.random.normal(key, (len(y), F)) * 0.3
+    return x, y
+
+
+@functools.lru_cache(maxsize=8)
+def _fitted(name: str):
+    x, y = _data()
+    return make_classifier(name, n_classes=C, in_features=F, dim=D,
+                           **METHOD_KW[name]).fit(x, y)
+
+
+# ------------------------------------------------------------------ queue --
+
+def _req(q, name, x=None, encoded=False):
+    return PredictRequest(uid=q.next_uid(), model_name=name,
+                          x=np.zeros(3) if x is None else x, encoded=encoded)
+
+
+def test_admission_fifo_grouped_by_model():
+    q = RequestQueue()
+    for name in ["a", "b", "a", "b", "a"]:
+        q.push(_req(q, name))
+    first = q.admit(max_batch=8)
+    assert [r.model_name for r in first] == ["a", "a", "a"]
+    assert [r.uid for r in first] == [0, 2, 4]          # arrival order kept
+    second = q.admit(max_batch=8)
+    assert [r.uid for r in second] == [1, 3]            # b's kept their order
+    assert q.admit(max_batch=8) == []
+    assert q.admitted == 5 and q.cycles == 2
+
+
+def test_admission_respects_max_batch():
+    q = RequestQueue()
+    for _ in range(7):
+        q.push(_req(q, "m"))
+    assert [r.uid for r in q.admit(max_batch=4)] == [0, 1, 2, 3]
+    assert [r.uid for r in q.admit(max_batch=4)] == [4, 5, 6]
+
+
+def test_admission_groups_on_input_form():
+    # raw-feature and pre-encoded requests never share a cycle (different
+    # input widths cannot stack into one batch)
+    q = RequestQueue()
+    q.push(_req(q, "m", x=np.zeros(3), encoded=False))
+    q.push(_req(q, "m", x=np.zeros(9), encoded=True))
+    q.push(_req(q, "m", x=np.zeros(3), encoded=False))
+    assert [r.uid for r in q.admit(8)] == [0, 2]
+    assert [r.uid for r in q.admit(8)] == [1]
+
+
+def test_future_requires_dispatch():
+    fut = PredictFuture()
+    assert not fut.done()
+    with pytest.raises(RuntimeError):
+        fut.result()
+
+
+# ---------------------------------------------------------------- buckets --
+
+def test_bucket_ladder_and_selection():
+    assert bucket_sizes(8) == (1, 2, 4, 8)
+    assert bucket_sizes(12) == (1, 2, 4, 8, 12)
+    cache = BucketedPredict(buckets=(1, 2, 4, 8))
+    assert [cache.bucket_for(n) for n in (1, 2, 3, 5, 8, 100)] \
+        == [1, 2, 4, 8, 8, 8]
+    with pytest.raises(ValueError):
+        bucket_sizes(0)
+
+
+def test_padding_never_leaks_into_outputs():
+    clf = _fitted("loghd")
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")
+    cache = BucketedPredict(buckets=(4, 16, 64))
+    direct = np.asarray(predict_encoded(clf.model, h))
+    for n in (1, 3, 4, 5, 17, 64):
+        got = np.asarray(cache.predict(clf.model, h[:n]))
+        assert got.shape == (n,)
+        np.testing.assert_array_equal(got, direct[:n], err_msg=f"n={n}")
+
+
+def test_oversized_batches_chunk_through_the_top_bucket():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")       # 90 rows > top bucket
+    cache = BucketedPredict(buckets=(8, 32))
+    got = np.asarray(cache.predict(clf.model, h))
+    np.testing.assert_array_equal(got, np.asarray(predict_encoded(
+        clf.model, h)))
+    # 90 = 32 + 32 + 26 -> buckets 32, 32, 32: one executable only
+    assert cache.executables() == 1
+
+
+def test_mixed_batch_sizes_compile_one_executable_per_bucket():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")
+    cache = BucketedPredict(buckets=(1, 2, 4, 8))
+    jfn = dispatch.predict_fn(clf.model)
+    base_shapes = jfn._cache_size()
+    sizes = [1, 3, 5, 7, 2, 8, 3, 5, 1, 6, 4, 7]      # mixed, repeating
+    for n in sizes:
+        cache.predict(clf.model, h[:n])
+    used_buckets = {cache.bucket_for(n) for n in sizes}
+    assert cache.executables() == len(used_buckets)
+    assert cache.stats.misses == len(used_buckets)
+    assert cache.stats.hits == len(sizes) - len(used_buckets)
+    # the underlying jit compiled exactly one trace per bucket shape —
+    # mixed batch sizes never retrace
+    assert jfn._cache_size() - base_shapes <= len(used_buckets)
+
+
+def test_clear_cache_resets_bucket_caches():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")
+    cache = BucketedPredict(buckets=(4,))
+    cache.predict(clf.model, h[:2])
+    assert cache.executables() == 1
+    dispatch.clear_cache()          # the single invalidation entry point
+    assert cache.executables() == 0
+    assert cache.stats.misses == 0 and cache.stats.hits == 0
+
+
+# ---------------------------------------------------------------- service --
+
+@pytest.mark.parametrize("name", list(METHOD_KW))
+def test_service_byte_identical_to_predict_encoded(name):
+    clf = _fitted(name)
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")
+    svc = ClassifierService({name: clf.model}, max_batch=8,
+                            buckets=(1, 2, 4, 8))
+    futs = [svc.submit(name, np.asarray(h[i]), encoded=True)
+            for i in range(11)]
+    svc.run_until_drained()
+    got = np.asarray([f.result() for f in futs])
+    np.testing.assert_array_equal(
+        got, np.asarray(predict_encoded(clf.model, h[:11])),
+        err_msg=f"{name}: served labels diverge from dispatch path")
+
+
+def test_service_raw_features_match_full_pipeline():
+    clf = _fitted("loghd")
+    x, _ = _data()
+    svc = ClassifierService({"loghd": clf.model}, max_batch=16)
+    futs = [svc.submit("loghd", np.asarray(x[i])) for i in range(9)]
+    assert svc.run_until_drained() == 9
+    got = [f.result() for f in futs]
+    assert got == [int(v) for v in clf.predict(x[:9])]
+
+
+def test_service_multi_model_side_by_side():
+    conv, log = _fitted("conventional"), _fitted("loghd")
+    x, _ = _data()
+    svc = ClassifierService({"conv": conv.model, "loghd": log.model},
+                            max_batch=8)
+    futs = {}
+    for i in range(10):
+        name = "conv" if i % 2 else "loghd"
+        futs[i] = (name, svc.submit(name, np.asarray(x[i])))
+    svc.run_until_drained()
+    conv_labels = [int(v) for v in conv.predict(x[:10])]
+    log_labels = [int(v) for v in log.predict(x[:10])]
+    for i, (name, fut) in futs.items():
+        want = conv_labels[i] if name == "conv" else log_labels[i]
+        assert fut.result() == want, (i, name)
+
+
+def test_warmup_precompiles_every_bucket():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=8,
+                            buckets=(1, 2, 4, 8))
+    assert svc.warmup() == 4
+    assert svc.bucket_cache.executables() == 4
+    misses = svc.bucket_cache.stats.misses
+    for n in (1, 3, 8, 5):              # every bucket already compiled:
+        futs = [svc.submit("m", np.asarray(x[i])) for i in range(n)]
+        svc.run_until_drained()
+        [f.result() for f in futs]
+    assert svc.bucket_cache.stats.misses == misses
+    assert svc.bucket_cache.executables() == 4
+
+
+def test_service_validation():
+    svc = ClassifierService(max_batch=4)
+    with pytest.raises(KeyError):
+        svc.submit("nope", np.zeros(3))
+    with pytest.raises(TypeError):
+        svc.register("bad", {"protos": np.zeros((2, 3))})
+
+
+# ---------------------------------------------------------------- loadgen --
+
+def test_closed_loop_stats_sane():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=16)
+    res = closed_loop(svc, "m", np.asarray(x[:40]))
+    assert res.n_requests == 40
+    assert res.rps > 0 and res.wall_s > 0
+    assert res.p50_ms <= res.p99_ms <= res.max_ms + 1e-9
+
+
+def test_open_loop_poisson_completes_all_requests():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=16)
+    res = open_loop_poisson(svc, "m", np.asarray(x[:16]), rate_rps=2000.0,
+                            n_requests=25, seed=1)
+    assert res.n_requests == 25
+    assert res.p50_ms <= res.p99_ms
+    assert len(svc.queue) == 0
