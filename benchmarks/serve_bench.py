@@ -1,5 +1,6 @@
 """Serving benchmark: the continuous-batched classifier service vs a naive
-one-request-per-call baseline, conventional vs LogHD at MATCHED memory.
+one-request-per-call baseline, conventional vs LogHD at MATCHED memory, at
+BOTH device residencies (f32 and int8 ``QTensor`` codes).
 
 The paper's deployment claims are inference throughput/energy per chip;
 the software-measurable counterpart on this container is requests/sec and
@@ -10,25 +11,38 @@ bucketed predict), at matched model memory:
                         bundles (the compressed deployment target);
   * ``conventional``  — one prototype per class with its encoder dimension
                         D' chosen so C * D' equals LogHD's word count
-                        (equal memory budget, the Table-II comparison axis).
+                        (equal memory budget, the Table-II comparison axis);
+  * ``*_int8``        — the same fitted models registered with
+                        ``quantize_bits=8``: the device holds the int8
+                        codes (the representation the robustness story is
+                        about), predict dequantizes in-graph, and the
+                        device-resident stored bytes drop to ~0.25x.
 
-For each family the bench runs
+For each (family, residency) the bench runs
 
   naive     — one request per call: encode a single row, batch-1 jit
               predict, host sync per request (what a per-request server
               with no batching does; the jit executable is warm, so this
               baseline pays only per-call/dispatch costs, not retraces);
   batched   — the serving subsystem in closed-loop saturation mode, plus
-              an open-loop Poisson pass for arrival-jittered latency.
+              an open-loop Poisson pass for arrival-jittered latency;
+
+and one adversarial mixed-traffic pass measures admission fairness: with
+every model flooded at once, the deficit-round-robin scheduler bounds any
+group's head-of-queue wait by the number of active groups.
 
 Appends one record per run to ``BENCH_serve.json`` at the repo root
 (same trajectory shape as ``BENCH_fault_sweep.json``).  CI gates:
 
   * batched throughput >= SPEEDUP_FLOOR x naive throughput per family;
   * batched labels byte-identical to the naive (= direct
-    ``api.dispatch.predict_encoded``) labels — padding never leaks;
+    ``api.dispatch.predict_encoded``) labels — padding never leaks; for
+    the int8 rows the reference is ``predict_encoded`` on the
+    quantized-then-materialized model;
+  * int8 device-resident stored bytes <= 0.5x the f32 rows;
+  * max head-of-group wait <= number of active groups (no starvation);
   * zero new executables after ``service.warmup()`` — mixed batch sizes
-    compile at most one executable per (family, bucket), all at start-up.
+    compile at most one executable per (family, residency, bucket).
 """
 
 from __future__ import annotations
@@ -42,7 +56,7 @@ import numpy as np
 
 from benchmarks.common import dataset_fixture, loghd_for_budget
 from repro.api import dispatch, make_classifier
-from repro.hdc.encoders import EncoderConfig, encode
+from repro.hdc.encoders import EncoderConfig, encode, encode_batched
 from repro.serving import ClassifierService, closed_loop, open_loop_poisson
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
@@ -53,6 +67,9 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
 # is typical on this 1-core container, so 3x is a conservative floor that
 # still catches a regression to effectively-unbatched serving.
 SPEEDUP_FLOOR = 3.0
+# int8 residency holds 1-byte codes instead of 4-byte f32 words (~0.25x);
+# 0.5x is the acceptance ceiling with headroom for scales/padding.
+INT8_BYTES_CEILING = 0.5
 # Best-of-N wall clock (same rationale as fault_sweep_bench: min-of-reps
 # recovers the steady state on a busy 1-core container).
 TIMING_REPS = 3
@@ -60,6 +77,7 @@ N_REQUESTS_QUICK = 256
 N_REQUESTS_FULL = 1024
 MAX_BATCH = 64
 POISSON_REQUESTS = 128
+FAIRNESS_FLOOD = 192
 
 
 def _matched_conventional_dim(log_model, n_features: int) -> int:
@@ -86,7 +104,8 @@ def build_served_pair(dataset: str = "isolet", budget: float = 0.2,
 
 def naive_serve(model, xs: np.ndarray) -> tuple[np.ndarray, float]:
     """One-request-per-call baseline: encode one row, predict batch-1,
-    host-sync per request.  Returns (labels, wall seconds)."""
+    host-sync per request.  Returns (labels, wall seconds).  Quantized
+    models run the same in-graph dequantize the service path uses."""
     enc_jit = jax.jit(encode, static_argnames="kind")
     labels = np.zeros(len(xs), np.int32)
     t0 = time.perf_counter()
@@ -95,6 +114,30 @@ def naive_serve(model, xs: np.ndarray) -> tuple[np.ndarray, float]:
                     kind=model.encoder_kind)
         labels[i] = int(dispatch.predict_encoded(model, h)[0])
     return labels, time.perf_counter() - t0
+
+
+def fairness_probe(service: ClassifierService, names, xs: np.ndarray,
+                   flood: int = FAIRNESS_FLOOD) -> dict:
+    """Adversarial mixed load: flood EVERY served model at once (heaviest
+    on the first), drain, and report the worst head-of-group wait the
+    deficit-round-robin scheduler allowed.  The no-starvation contract:
+    max wait <= number of active groups."""
+    wait_before = service.queue.max_group_wait_cycles
+    for i, x in enumerate(xs[:flood]):
+        service.submit(names[0], x)
+        if i % 4 == 0:                       # cold models trickle in behind
+            for name in names[1:]:
+                service.submit(name, x)
+    n_groups = service.queue.n_groups()
+    futs = [service.submit(name, xs[0]) for name in names]   # cold heads
+    service.run_until_drained()
+    for f in futs:
+        f.result()
+    return {
+        "n_groups": int(n_groups),
+        "max_group_wait_cycles": int(service.queue.max_group_wait_cycles),
+        "wait_before_probe": int(wait_before),
+    }
 
 
 def run(quick: bool = True, dataset: str = "isolet",
@@ -108,7 +151,10 @@ def run(quick: bool = True, dataset: str = "isolet",
         x_te = np.tile(x_te, (reps, 1))[:n_requests]
         y_te = np.tile(y_te, reps)[:n_requests]
 
-    service = ClassifierService(models, max_batch=MAX_BATCH)
+    service = ClassifierService(max_batch=MAX_BATCH)
+    for name, model in models.items():
+        service.register(name, model)                       # f32 residency
+        service.register(f"{name}_int8", model, quantize_bits=8)
     # Precompile every (model, bucket) executable up front — a real service
     # warms at start-up, so the timed runs (and the open-loop latency
     # percentiles) measure serving, never tracing.
@@ -116,55 +162,77 @@ def run(quick: bool = True, dataset: str = "isolet",
     per_family = {}
     all_identical = True
     min_speedup = float("inf")
+    max_bytes_ratio = 0.0
 
-    for name in sorted(models):
-        model = service.model(name)
-        # ---- warm both paths (compile + allocator steady state) ----------
-        naive_serve(model, x_te[:2])
-        closed_loop(service, name, x_te[: MAX_BATCH + 3])
-        exe_before = service.bucket_cache.executables()
+    for base in sorted(models):
+        for name in (base, f"{base}_int8"):
+            model = service.model(name)
+            residency = "int8" if name.endswith("_int8") else "f32"
+            # ---- warm both paths (compile + allocator steady state) ------
+            naive_serve(model, x_te[:2])
+            closed_loop(service, name, x_te[: MAX_BATCH + 3])
+            exe_before = service.bucket_cache.executables()
 
-        # ---- naive one-request-per-call ----------------------------------
-        naive_best = None
-        for _ in range(TIMING_REPS):
-            naive_labels, t = naive_serve(model, x_te)
-            naive_best = t if naive_best is None else min(naive_best, t)
-        naive_rps = n_requests / naive_best
+            # ---- naive one-request-per-call ------------------------------
+            naive_best = None
+            for _ in range(TIMING_REPS):
+                naive_labels, t = naive_serve(model, x_te)
+                naive_best = t if naive_best is None else min(naive_best, t)
+            naive_rps = n_requests / naive_best
 
-        # ---- batched closed-loop saturation ------------------------------
-        closed_best = None
-        for _ in range(TIMING_REPS):
-            res = closed_loop(service, name, x_te)
-            closed_best = (res if closed_best is None
-                           else max(closed_best, res, key=lambda r: r.rps))
-        # correctness: serve once more and keep the labels
-        futs = [service.submit(name, x) for x in x_te]
-        service.run_until_drained()
-        batched_labels = np.asarray([f.result() for f in futs], np.int32)
+            # ---- batched closed-loop saturation --------------------------
+            closed_best = None
+            for _ in range(TIMING_REPS):
+                res = closed_loop(service, name, x_te)
+                closed_best = (res if closed_best is None
+                               else max(closed_best, res,
+                                        key=lambda r: r.rps))
+            # correctness: serve once more and keep the labels
+            futs = [service.submit(name, x) for x in x_te]
+            service.run_until_drained()
+            batched_labels = np.asarray([f.result() for f in futs], np.int32)
 
-        # ---- open-loop Poisson at ~half the measured saturation rate -----
-        rate = max(closed_best.rps * 0.5, 1.0)
-        poisson = open_loop_poisson(service, name, x_te[:POISSON_REQUESTS],
-                                    rate_rps=rate,
-                                    n_requests=POISSON_REQUESTS, seed=0)
+            # ---- open-loop Poisson at ~half the measured saturation rate -
+            rate = max(closed_best.rps * 0.5, 1.0)
+            poisson = open_loop_poisson(service, name,
+                                        x_te[:POISSON_REQUESTS],
+                                        rate_rps=rate,
+                                        n_requests=POISSON_REQUESTS, seed=0)
 
-        identical = bool(np.array_equal(naive_labels, batched_labels))
-        all_identical = all_identical and identical
-        speedup = closed_best.rps / naive_rps
-        min_speedup = min(min_speedup, speedup)
-        per_family[name] = {
-            "model_bits_f32": int(model.model_bits(32)),
-            "n_classes": int(model.n_classes),
-            "accuracy": round(float(np.mean(batched_labels == y_te)), 4),
-            "labels_identical_to_naive": identical,
-            "naive_rps": round(naive_rps, 1),
-            "naive_p50_ms": round(1e3 * naive_best / n_requests, 4),
-            "batched": closed_best.to_record(),
-            "poisson": poisson.to_record(),
-            "speedup_vs_naive": round(speedup, 2),
-            "new_executables_after_warm": (service.bucket_cache.executables()
-                                           - exe_before),
-        }
+            identical = bool(np.array_equal(naive_labels, batched_labels))
+            if residency == "int8":
+                # acceptance reference: predict_encoded on the quantized-
+                # then-materialized model (the int8 path's f32 twin)
+                h_all = encode_batched(model.enc, jax.numpy.asarray(x_te),
+                                       model.encoder_kind)
+                ref = np.asarray(dispatch.predict_encoded(
+                    model.materialized(), h_all), np.int32)
+                identical = identical and bool(
+                    np.array_equal(batched_labels, ref))
+            all_identical = all_identical and identical
+            speedup = closed_best.rps / naive_rps
+            min_speedup = min(min_speedup, speedup)
+            per_family[name] = {
+                "residency": residency,
+                "model_bits_f32": int(model.model_bits(32)),
+                "model_bytes_resident": int(service.model_bytes(name)),
+                "n_classes": int(model.n_classes),
+                "accuracy": round(float(np.mean(batched_labels == y_te)), 4),
+                "labels_identical_to_naive": identical,
+                "naive_rps": round(naive_rps, 1),
+                "naive_p50_ms": round(1e3 * naive_best / n_requests, 4),
+                "batched": closed_best.to_record(),
+                "poisson": poisson.to_record(),
+                "speedup_vs_naive": round(speedup, 2),
+                "new_executables_after_warm": (
+                    service.bucket_cache.executables() - exe_before),
+            }
+        ratio = (per_family[f"{base}_int8"]["model_bytes_resident"]
+                 / per_family[base]["model_bytes_resident"])
+        per_family[f"{base}_int8"]["bytes_vs_f32"] = round(ratio, 4)
+        max_bytes_ratio = max(max_bytes_ratio, ratio)
+
+    fairness = fairness_probe(service, sorted(service.served_models()), x_te)
 
     record = {
         "bench": "serve",
@@ -172,9 +240,12 @@ def run(quick: bool = True, dataset: str = "isolet",
         "dataset": dataset, "budget": budget,
         "n_requests": n_requests, "max_batch": MAX_BATCH,
         "families": per_family,
+        "fairness": fairness,
         "bucket_cache": service.bucket_cache.snapshot(),
         "min_speedup_vs_naive": round(min_speedup, 2),
+        "max_int8_bytes_ratio": round(max_bytes_ratio, 4),
         "labels_identical": all_identical,
+        "service_errors": service.errors,
         "backend": jax.default_backend(),
         "unix_time": int(time.time()),
     }
@@ -203,13 +274,21 @@ def main(quick: bool = True):
     record = run(quick=quick)
     path = write_record(record)
     for name, fam in record["families"].items():
-        print(f"# serve {name}: batched {fam['batched']['rps']} rps "
+        print(f"# serve {name} [{fam['residency']}]: batched "
+              f"{fam['batched']['rps']} rps "
               f"(p50 {fam['batched']['p50_ms']} ms, "
               f"p99 {fam['batched']['p99_ms']} ms) vs naive "
               f"{fam['naive_rps']} rps -> {fam['speedup_vs_naive']}x; "
-              f"acc {fam['accuracy']}, identical={fam['labels_identical_to_naive']}")
-    print(f"# min speedup {record['min_speedup_vs_naive']}x "
-          f"(CI floor {SPEEDUP_FLOOR}x); trajectory appended to {path}")
+              f"acc {fam['accuracy']}, identical="
+              f"{fam['labels_identical_to_naive']}, "
+              f"{fam['model_bytes_resident']} resident bytes")
+    fair = record["fairness"]
+    print(f"# fairness: max head-of-group wait "
+          f"{fair['max_group_wait_cycles']} cycles across "
+          f"{fair['n_groups']} groups; min speedup "
+          f"{record['min_speedup_vs_naive']}x (CI floor {SPEEDUP_FLOOR}x); "
+          f"int8 bytes ratio {record['max_int8_bytes_ratio']} "
+          f"(ceiling {INT8_BYTES_CEILING}); trajectory appended to {path}")
     failures = []
     if record["min_speedup_vs_naive"] < SPEEDUP_FLOOR:
         failures.append(f"batched/naive speedup "
@@ -217,7 +296,18 @@ def main(quick: bool = True):
                         f"{SPEEDUP_FLOOR}x CI floor")
     if not record["labels_identical"]:
         failures.append("batched labels diverge from the naive per-request "
-                        "path (padding leaked)")
+                        "path (padding leaked or residency drifted)")
+    if record["max_int8_bytes_ratio"] > INT8_BYTES_CEILING:
+        failures.append(f"int8 residency holds "
+                        f"{record['max_int8_bytes_ratio']}x the f32 bytes "
+                        f"(ceiling {INT8_BYTES_CEILING}x)")
+    if fair["max_group_wait_cycles"] > fair["n_groups"]:
+        failures.append(f"head-of-group wait {fair['max_group_wait_cycles']} "
+                        f"cycles exceeds the {fair['n_groups']} active "
+                        f"groups (admission starved a model)")
+    if record["service_errors"]:
+        failures.append(f"{record['service_errors']} service cycles bound "
+                        f"exceptions during the bench")
     for name, fam in record["families"].items():
         if fam["new_executables_after_warm"] > 0:
             failures.append(f"{name}: compiled new executables after warmup "

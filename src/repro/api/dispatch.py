@@ -71,6 +71,12 @@ def _predict_kernel(model: HDModel, h: jax.Array) -> jax.Array:
 @functools.lru_cache(maxsize=None)
 def _predict_jit(cls: type, metric: str, use_kernels: bool) -> Callable:
     def run(model: HDModel, h: jax.Array) -> jax.Array:
+        # quantized (int8-resident) models dequantize IN-GRAPH: device
+        # memory holds the QTensor codes, the f32 view is a fused transient.
+        # materialized() is the identity for f32 models, so both residencies
+        # share this trace body (jit keys on the pytree structure, giving
+        # one executable per residency).
+        model = model.materialized()
         if use_kernels:
             return _predict_kernel(model, h)
         return model.predict_encoded(h)

@@ -172,6 +172,20 @@ class HDModel:
         """Stored-model size in bits at ``bits``-bit word precision."""
         raise NotImplementedError
 
+    def stored_bytes(self) -> int:
+        """Actual bytes of the stored leaves as held right now — f32 arrays
+        at 4 bytes/word, QTensor residency at the int8 codes (+ the scalar
+        scale).  The serving layer's device-residency accounting; the shared
+        encoder is excluded, matching ``model_bits``."""
+        total = 0
+        for name in self.stored_leaves:
+            v = getattr(self, name)
+            if isinstance(v, QTensor):
+                total += v.codes.size * v.codes.dtype.itemsize + 4  # f32 scale
+            else:
+                total += v.size * v.dtype.itemsize
+        return total
+
     @property
     def n_classes(self) -> int:
         raise NotImplementedError

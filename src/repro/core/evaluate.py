@@ -82,6 +82,29 @@ def trial_keys(key: jax.Array, n_trials: int) -> jax.Array:
     return jnp.stack(subs)
 
 
+def pad_p_grid(p_arr: jax.Array, chunk: int) -> jax.Array:
+    """Reshape a p-grid into (n_chunks, chunk) for the chunked sweep.
+
+    A grid that is not a chunk multiple is padded **by repeating the final
+    real p** — the executable shape is identical and the padded rows are
+    sliced off by the caller, but the engine only ever evaluates p values
+    that are actually in the grid (padding with a synthetic p=0.0 spent the
+    full trials x corrupt x predict cost of the pad rows on a point nobody
+    asked for).
+
+    >>> import jax.numpy as jnp
+    >>> pad_p_grid(jnp.asarray([1.0, 2.0, 3.0]), 2).tolist()
+    [[1.0, 2.0], [3.0, 3.0]]
+    """
+    n_p = int(p_arr.shape[0])
+    n_chunks = -(-n_p // chunk)
+    pad = n_chunks * chunk - n_p
+    if pad:
+        p_arr = jnp.concatenate(
+            [p_arr, jnp.full((pad,), p_arr[-1], p_arr.dtype)])
+    return p_arr.reshape(n_chunks, chunk)
+
+
 # One compiled sweep executable per (predict path, scope, bits).  Shape
 # specialization within an entry is handled by jax.jit itself.
 _SWEEP_JIT_CACHE: dict = {}
@@ -172,11 +195,8 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
             else type(model).predict_encoded)
 
     chunk = n_p if p_chunk is None else max(1, min(int(p_chunk), n_p))
-    n_chunks = -(-n_p // chunk)
-    pad = n_chunks * chunk - n_p
-    if pad:
-        p_arr = jnp.concatenate([p_arr, jnp.zeros((pad,), jnp.float32)])
-    p_chunks = p_arr.reshape(n_chunks, chunk)
+    p_chunks = pad_p_grid(p_arr, chunk)
+    n_chunks = p_chunks.shape[0]
 
     tkeys = trial_keys(key, n_trials)
     sweep = _sweep_fn(pred, scope, int(bits))

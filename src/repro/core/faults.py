@@ -45,6 +45,12 @@ def packed_flip_mask(key: jax.Array, p, shape, nbits: int,
     axis is ever materialized.  `p` may be a python float or a traced
     scalar.
     """
+    width = jnp.iinfo(dtype).bits
+    if nbits > width:
+        raise ValueError(
+            f"packed_flip_mask: nbits={nbits} does not fit the {width}-bit "
+            f"mask dtype {jnp.dtype(dtype).name} — the high planes would be "
+            f"silently shifted out; pass a wider dtype")
     keys = bit_plane_keys(key, nbits)
     mask = jnp.zeros(shape, dtype)
     for i in range(nbits):
@@ -61,6 +67,11 @@ def flip_bits_int(q: QTensor, p, key: jax.Array) -> QTensor:
     read back.
     """
     b = q.bits
+    if b > 8:
+        raise ValueError(
+            f"flip_bits_int stores codes as int8 words and flips at most 8 "
+            f"bit planes; got a {b}-bit QTensor — widening to 16-bit codes "
+            f"needs a uint16 mask path, not a silent uint8 truncation")
     u = q.codes.astype(jnp.uint8) & jnp.uint8((1 << b) - 1)
     u = u ^ packed_flip_mask(key, p, q.codes.shape, b, jnp.uint8)
     if b == 1:

@@ -11,17 +11,21 @@ classify requests.
 Module map
 ----------
   queue.py      ``PredictRequest``/``PredictFuture``/``RequestQueue``:
-                FIFO arrival order, grouped slot admission (up to
-                ``max_batch`` requests for one model per cycle), futures
-                bound to rows of the async batched device result.
+                deficit-round-robin admission over per-(model, input-form)
+                subqueues (within-group FIFO, bounded cross-model wait of
+                ``n_groups`` cycles), futures with the full lifecycle —
+                pending -> dispatched -> done/failed/cancelled, with
+                ``result(timeout=...)``, ``exception()`` and ``cancel()``.
   buckets.py    ``BucketedPredict``: the shape-bucketed jit cache over
                 ``api.dispatch.predict_fn`` — batches pad up to a fixed
                 bucket ladder so mixed batch sizes compile at most one
-                executable per (model family, bucket).  Registers with
+                executable per (family, residency, bucket).  Registers with
                 ``api.dispatch.clear_cache`` (single invalidation point).
   service.py    ``ClassifierService``: multi-model registry (device_put at
-                registration), encode -> bucketed predict service cycles,
-                non-blocking dispatch.
+                registration, optional int8 ``QTensor`` residency via
+                ``register(..., quantize_bits=8)``), encode -> bucketed
+                predict service cycles, non-blocking error-binding
+                dispatch, background ``serve_forever()``/``shutdown()``.
   loadgen.py    open-loop Poisson + closed-loop saturation load shapes;
                 p50/p99 latency and requests/sec (``LoadResult``).
 

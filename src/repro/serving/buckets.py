@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.models import HDModel
+from repro.core.quantize import QTensor
 
 __all__ = ["bucket_sizes", "BucketedPredict"]
 
@@ -120,7 +121,13 @@ class BucketedPredict:
         metric = getattr(model, "metric", "l2")
         if use_kernels is None:
             use_kernels = dispatch.kernels_qualify(metric)
-        return (type(model), metric, bool(use_kernels))
+        # residency: a quantized model (int8 QTensor codes, dequantized
+        # in-graph) is a different executable than its f32 twin — jit keys
+        # on the pytree structure, so the accounting must too
+        residency = tuple((name, getattr(model, name).bits)
+                          for name in model.stored_leaves
+                          if isinstance(getattr(model, name), QTensor))
+        return (type(model), metric, bool(use_kernels), residency)
 
     # ------------------------------------------------------------ predict --
     def _predict_bucket(self, model: HDModel, h: jax.Array, bucket: int,

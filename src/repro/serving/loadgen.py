@@ -71,9 +71,9 @@ def closed_loop(service: ClassifierService, model_name: str, xs,
     while len(service.queue):
         dispatched.extend(service.step())
     lat = []
-    for req in dispatched:                       # arrival order (FIFO admit)
-        req.future.result()
-        lat.append(service.now() - req.t_arrival)
+    for req in dispatched:                  # dispatch order (DRR admission:
+        req.future.result()                 # within-group FIFO, groups
+        lat.append(service.now() - req.t_arrival)   # round-robin)
     wall = service.now() - t_start
     return _summarize("closed_loop", np.asarray(lat), wall)
 
@@ -99,7 +99,9 @@ def open_loop_poisson(service: ClassifierService, model_name: str, xs,
             i += 1
         batch = service.step()
         if batch:
-            jax.block_until_ready(batch[-1].future._batch)
+            last = batch[-1].future._batch
+            if last is not None:
+                jax.block_until_ready(last)
             t_done = service.now()
             for req in batch:
                 req.future.result()

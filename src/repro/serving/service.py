@@ -2,27 +2,32 @@
 
 ``ClassifierService`` is the serving counterpart of the eval path: a
 multi-model registry (conventional and LogHD at matched memory serve side
-by side), each model ``jax.device_put`` once at registration, a FIFO
+by side, optionally with **int8 device residency** via ``quantize_bits``),
+each model ``jax.device_put`` once at registration, a deficit-round-robin
 request queue with grouped slot admission (``serving/queue.py``), and a
 shape-bucketed jit cache (``serving/buckets.py``) so mixed batch sizes
-compile at most one executable per (family, bucket).
+compile at most one executable per (family, residency, bucket).
 
 One service cycle (``step()``):
 
-    admit up to max_batch queued requests for the head-of-queue model
+    admit up to max_batch queued requests for the round-robin head group
     stack features -> pad to the batch's bucket -> encode (phi is jit per
       bucket shape too, so the encoder never retraces either)
-    bucketed predict through api.dispatch.predict_fn
+    bucketed predict through api.dispatch.predict_fn (quantized models
+      dequantize in-graph; device memory holds the int8 codes)
     bind each request's future to its row of the async device result
 
 Dispatch is non-blocking: ``step()`` returns as soon as the batch is
-enqueued on device; futures force the transfer on ``result()``.  Because
-admission is FIFO, draining futures in arrival order never blocks on a
-later-admitted request.
+enqueued on device; futures force the transfer on ``result()``.  A cycle
+that raises binds the exception into exactly the affected futures (the
+service survives and keeps serving — no request is ever silently lost),
+and ``serve_forever()`` runs the cycle loop on a background thread so
+host batch assembly overlaps device execution.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -65,18 +70,35 @@ class ClassifierService:
         self.queue = RequestQueue()
         self._models: dict[str, HDModel] = {}
         self._t0 = time.perf_counter()
+        self._cycle_lock = threading.Lock()   # one cycle at a time
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._work = threading.Event()        # wakes an idle dispatch thread
+        self.errors = 0                       # cycles that bound an exception
         if models:
             for name, model in models.items():
                 self.register(name, model)
 
     # ----------------------------------------------------------- registry --
-    def register(self, name: str, model: HDModel) -> None:
+    def register(self, name: str, model: HDModel, *,
+                 quantize_bits: Optional[int] = None) -> None:
         """Add (or replace) a served model; moved device-resident once here,
-        never per request."""
+        never per request.
+
+        With ``quantize_bits=b`` the stored leaves are post-training
+        quantized first and the device holds the int8 ``QTensor`` codes —
+        for b=8 that is 0.25x the f32 bytes per replica; predict dequantizes
+        in-graph through the family's ``materialized()`` plumbing, so labels
+        match ``predict_encoded`` on the quantized-then-materialized model
+        exactly."""
         if not isinstance(model, HDModel):
             raise TypeError(f"served models are typed repro.api models, got "
                             f"{type(model).__name__}")
-        self._models[name] = jax.device_put(model.materialized())
+        if quantize_bits is not None:
+            model = model.quantized(int(quantize_bits))
+        else:
+            model = model.materialized()
+        self._models[name] = jax.device_put(model)
 
     def model(self, name: str) -> HDModel:
         try:
@@ -87,6 +109,12 @@ class ClassifierService:
 
     def served_models(self) -> tuple[str, ...]:
         return tuple(sorted(self._models))
+
+    def model_bytes(self, name: str) -> int:
+        """Device-resident bytes of `name`'s stored leaves (int8 residency
+        is ~0.25x the f32 rows; the shared encoder is not counted, matching
+        ``model_bits`` accounting)."""
+        return self.model(name).stored_bytes()
 
     # -------------------------------------------------------------- clock --
     def now(self) -> float:
@@ -100,18 +128,29 @@ class ClassifierService:
         A service start-up step: after warmup, steady-state traffic never
         pays a compile, whatever batch sizes the scheduler assembles (the
         open-loop latency percentiles then measure serving, not tracing).
-        Returns the number of (model, bucket) pairs touched."""
+        Covers BOTH input forms: the raw-feature path (encode per bucket,
+        then predict) and the encoded-input path — ``submit`` normalizes
+        every input to f32, so an encoded (bucket, D) f32 submission hits
+        the same predict executable the encode path compiled; the direct
+        bucket-cache call here pins that.  Returns the number of
+        (model, bucket) pairs touched."""
         pairs = 0
         labels = None
         for name in (model_names if model_names is not None
                      else self.served_models()):
             model = self.model(name)
             n_feat = model.enc["proj"].shape[0]
+            dim = model.enc["proj"].shape[1]
             for b in self.bucket_cache.buckets:
                 h = _encode_jit(model.enc,
                                 jnp.zeros((b, n_feat), jnp.float32),
                                 kind=model.encoder_kind)
                 labels = self.bucket_cache.predict(model, h)
+                # the encoded-input form: same (bucket, D) f32 aval as the
+                # encode output, so this is a cache hit, not a new trace —
+                # warmed explicitly so the contract cannot drift
+                labels = self.bucket_cache.predict(
+                    model, jnp.zeros((b, dim), jnp.float32))
                 pairs += 1
         if labels is not None:
             jax.block_until_ready(labels)
@@ -123,42 +162,67 @@ class ClassifierService:
         """Enqueue one request; returns its future.
 
         ``x`` is one feature vector (F,) — or one pre-encoded hypervector
-        (D,) with ``encoded=True``.  ``t_arrival`` (service-clock seconds)
-        lets open-loop load generators stamp the scheduled arrival."""
-        self.model(model_name)                      # fail fast on bad name
+        (D,) with ``encoded=True``.  Inputs are validated and normalized to
+        f32 here, so a malformed submit raises immediately (never poisoning
+        a service cycle) and int/f64 submissions reuse the f32 executables
+        ``warmup()`` compiled instead of minting hidden per-dtype ones.
+        ``t_arrival`` (service-clock seconds) lets open-loop load
+        generators stamp the scheduled arrival."""
+        model = self.model(model_name)              # fail fast on bad name
+        x = np.asarray(x, np.float32)               # one dtype, one executable
+        want = model.enc["proj"].shape[1 if encoded else 0]
+        if x.shape != (want,):
+            form = "pre-encoded hypervector" if encoded else "feature vector"
+            raise ValueError(
+                f"{model_name!r} expects a ({want},) {form}, got shape "
+                f"{x.shape} — one request per submit; batch via repeated "
+                f"submits (the scheduler batches for you)")
         req = PredictRequest(
             uid=self.queue.next_uid(), model_name=model_name,
-            x=np.asarray(x), encoded=bool(encoded),
+            x=x, encoded=bool(encoded),
             t_arrival=self.now() if t_arrival is None else float(t_arrival))
         self.queue.push(req)
+        self._work.set()                            # wake the dispatch thread
         return req.future
 
     # --------------------------------------------------------------- step --
     def step(self) -> list[PredictRequest]:
-        """Run one service cycle; returns the dispatched requests (empty if
-        the queue was empty).  Non-blocking: results stay on device."""
-        batch = self.queue.admit(self.max_batch)
-        if not batch:
-            return []
-        model = self.model(batch[0].model_name)
-        n = len(batch)
-        bucket = self.bucket_cache.bucket_for(n)
-        xs = np.stack([r.x for r in batch])
-        if n < bucket:                       # pad BEFORE encode so phi also
-            xs = np.concatenate(             # compiles once per bucket
-                [xs, np.zeros((bucket - n,) + xs.shape[1:], xs.dtype)])
-        if batch[0].encoded:
-            h = jnp.asarray(xs)
-        else:
-            h = _encode_jit(model.enc, jnp.asarray(xs),
-                            kind=model.encoder_kind)
-        labels = self.bucket_cache.predict(model, h)
-        for row, req in enumerate(batch):
-            req.future._bind(labels, row)
-        return batch
+        """Run one service cycle; returns the admitted requests (empty if
+        the queue was empty).  Non-blocking: results stay on device.
+
+        Errors are bound, not raised: if any stage of the cycle throws, the
+        exception lands in exactly this batch's futures (``result()``
+        re-raises it) and the service keeps serving the rest of the queue.
+        """
+        with self._cycle_lock:
+            batch = self.queue.admit(self.max_batch)
+            if not batch:
+                return []
+            try:
+                model = self.model(batch[0].model_name)
+                n = len(batch)
+                bucket = self.bucket_cache.bucket_for(n)
+                xs = np.stack([r.x for r in batch])
+                if n < bucket:               # pad BEFORE encode so phi also
+                    xs = np.concatenate(     # compiles once per bucket
+                        [xs, np.zeros((bucket - n,) + xs.shape[1:],
+                                      xs.dtype)])
+                if batch[0].encoded:
+                    h = jnp.asarray(xs)
+                else:
+                    h = _encode_jit(model.enc, jnp.asarray(xs),
+                                    kind=model.encoder_kind)
+                labels = self.bucket_cache.predict(model, h)
+                for row, req in enumerate(batch):
+                    req.future._bind(labels, row)
+            except Exception as exc:         # noqa: BLE001 — bound, not lost
+                self.errors += 1
+                for req in batch:
+                    req.future._set_exception(exc)
+            return batch
 
     def run_until_drained(self, block: bool = False) -> int:
-        """Cycle until the queue is empty; returns requests dispatched.
+        """Cycle until the queue is empty; returns requests admitted.
         With ``block=True`` also waits for the last device result."""
         total = 0
         labels = None
@@ -171,6 +235,49 @@ class ClassifierService:
             jax.block_until_ready(labels)
         return total
 
+    # -------------------------------------------------- background thread --
+    def serve_forever(self, *, poll_s: float = 0.01) -> None:
+        """Start the background dispatch thread: it runs ``step()`` in a
+        loop, so host batch assembly for cycle k+1 overlaps the device
+        executing cycle k (dispatch is async) and callers just ``submit``
+        and ``result(timeout=...)``.  Idempotent-unsafe: raises if already
+        serving.  ``poll_s`` caps the idle re-check interval (submits wake
+        the thread immediately)."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("serve_forever() already running — "
+                               "shutdown() first")
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.is_set():
+                if not self.step():
+                    self._work.wait(poll_s)
+                    self._work.clear()
+
+        self._thread = threading.Thread(
+            target=_loop, name="classifier-service-dispatch", daemon=True)
+        self._thread.start()
+
+    def serving(self) -> bool:
+        """True while the background dispatch thread is running."""
+        return self._thread is not None and self._thread.is_alive()
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the background dispatch thread (no-op if not serving).
+
+        With ``drain=True`` (default) any still-queued requests are served
+        synchronously after the thread stops, so shutdown never strands a
+        pending future; with ``drain=False`` they stay queued (a later
+        ``step()``/``serve_forever()`` picks them up)."""
+        if self._thread is not None:
+            self._stop.set()
+            self._work.set()                 # unblock an idle wait
+            self._thread.join(timeout)
+            self._thread = None
+        if drain:
+            self.run_until_drained()
+
     # -------------------------------------------------------------- stats --
     def stats(self) -> dict:
         return {
@@ -178,5 +285,8 @@ class ClassifierService:
             "admitted": self.queue.admitted,
             "cycles": self.queue.cycles,
             "queued": len(self.queue),
+            "errors": self.errors,
+            "max_group_wait_cycles": self.queue.max_group_wait_cycles,
+            "serving": self.serving(),
             "bucket_cache": self.bucket_cache.snapshot(),
         }

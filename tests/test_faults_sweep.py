@@ -71,6 +71,22 @@ def test_packed_mask_p_endpoints():
     np.testing.assert_array_equal(np.asarray(f), 0xF)
 
 
+def test_wide_bit_widths_raise_instead_of_truncating():
+    """bits > 8 used to silently truncate through astype(uint8) — a future
+    16-bit QTensor would have corrupted the wrong bits.  Pinned: both entry
+    points raise a clear ValueError."""
+    key = jax.random.PRNGKey(0)
+    q16 = QTensor(jnp.zeros((4, 4), jnp.int8), jnp.float32(1.0), 16)
+    with pytest.raises(ValueError, match="16-bit"):
+        flip_bits_int(q16, 0.1, key)
+    with pytest.raises(ValueError, match="does not fit"):
+        packed_flip_mask(key, 0.1, (4, 4), 16, jnp.uint8)
+    with pytest.raises(ValueError, match="does not fit"):
+        packed_flip_mask(key, 0.1, (4, 4), 33, jnp.uint32)
+    # exactly-at-width stays legal (the f32 path packs 32 planes in uint32)
+    assert packed_flip_mask(key, 0.0, (4, 4), 32, jnp.uint32).shape == (4, 4)
+
+
 def test_flip_bits_identity_and_traced_p():
     w = jax.random.normal(jax.random.PRNGKey(1), (40, 50))
     q = quantize(w, 4)
@@ -150,6 +166,22 @@ def test_sweep_chunking_invariance():
         out = ev.sweep_under_flips(clf.model, 4, p_grid, h, y, key,
                                    n_trials=2, p_chunk=chunk)
         np.testing.assert_array_equal(full, out)
+
+
+def test_sweep_chunk_padding_adds_no_distinct_p():
+    """Chunk padding repeats the final real p instead of inventing a p=0.0
+    row: every p the engine evaluates is in the requested grid (the pad
+    rows' trials x corrupt x predict work is spent on a real grid point and
+    still sliced off)."""
+    for grid, chunk in ([0.3, 0.1, 0.2], 2), ([0.05], 4), ([0.1] * 5, 3):
+        padded = ev.pad_p_grid(jnp.asarray(grid, jnp.float32), chunk)
+        assert padded.shape == (-(-len(grid) // chunk), chunk)
+        assert set(np.unique(padded)) <= set(np.asarray(grid, np.float32)), \
+            (grid, chunk)
+        # real rows are preserved in order before the pad
+        np.testing.assert_array_equal(
+            np.asarray(padded).reshape(-1)[:len(grid)],
+            np.asarray(grid, np.float32))
 
 
 def test_sweep_statistical_ci_vs_independent_loop():

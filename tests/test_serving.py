@@ -1,10 +1,16 @@
-"""Serving subsystem tests: queue admission order, bucket selection and
-padding correctness, jit-cache hit accounting across mixed batch sizes
-(the no-retrace-per-request contract), byte-identical predictions vs the
-direct dispatch path for every registered family, and the single
-cache-invalidation entry point."""
+"""Serving subsystem tests: fair (deficit-round-robin) admission and the
+bounded-wait no-starvation guarantee, the full future lifecycle (pending ->
+dispatched -> done/failed/cancelled, timeouts), error propagation (a failing
+cycle binds its exception into exactly the affected futures — zero lost
+requests), submit validation + dtype normalization (no hidden per-dtype
+executables), the background dispatch thread, quantized (int8) device
+residency, bucket selection and padding correctness, jit-cache hit
+accounting across mixed batch sizes (the no-retrace-per-request contract),
+byte-identical predictions vs the direct dispatch path for every registered
+family, and the single cache-invalidation entry point."""
 
 import functools
+from concurrent.futures import CancelledError
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +22,7 @@ from repro.hdc.encoders import encode_batched
 from repro.serving import (BucketedPredict, ClassifierService, PredictFuture,
                            PredictRequest, RequestQueue, bucket_sizes,
                            closed_loop, open_loop_poisson)
+from repro.serving.service import _encode_jit
 
 C, F, D = 5, 12, 256
 
@@ -87,6 +94,251 @@ def test_future_requires_dispatch():
     assert not fut.done()
     with pytest.raises(RuntimeError):
         fut.result()
+
+
+# ----------------------------------------------------- fairness (no HoL) --
+
+def test_no_cross_model_starvation_under_hot_load():
+    """The adversarial arrival pattern the strict head-group FIFO lost to:
+    a hot model floods the queue faster than one cycle drains it, a cold
+    model's request arrives after the backlog.  DRR must admit the cold
+    head within n_groups cycles."""
+    q = RequestQueue()
+    for _ in range(50):
+        q.push(_req(q, "hot"))
+    cold = q.push(_req(q, "cold"))
+    served_cold_at = None
+    for cycle in range(6):
+        batch = q.admit(max_batch=8)
+        for _ in range(8):                  # sustain the flood between cycles
+            q.push(_req(q, "hot"))
+        if any(r.model_name == "cold" for r in batch):
+            served_cold_at = cycle
+            break
+    assert served_cold_at is not None, "cold model starved"
+    assert served_cold_at < 2               # n_groups == 2 bounds the wait
+    assert q.max_group_wait_cycles < 2
+    assert not cold.dispatched()            # queue-level test: no service
+
+
+def test_round_robin_cycles_all_groups():
+    q = RequestQueue()
+    for name in ["a"] * 5 + ["b"] * 5 + ["c"] * 5:
+        q.push(_req(q, name))
+    order = []
+    while len(q):
+        batch = q.admit(max_batch=2)
+        order.append(batch[0].model_name)
+        assert len({r.group for r in batch}) == 1   # grouped-slot contract
+    assert order == ["a", "b", "c"] * 3      # 5 reqs / 2 slots -> 3 rounds
+    assert q.max_group_wait_cycles <= 3
+
+
+def test_service_fairness_bounded_wait_under_saturation():
+    conv, log = _fitted("conventional"), _fitted("loghd")
+    x, _ = _data()
+    svc = ClassifierService({"hot": conv.model, "cold": log.model},
+                            max_batch=4, buckets=(1, 2, 4))
+    for i in range(24):
+        svc.submit("hot", np.asarray(x[i % len(x)]))
+    cold_fut = svc.submit("cold", np.asarray(x[0]))
+    svc.step()                              # serves one hot batch
+    svc.step()                              # DRR: cold is next, not hot
+    assert cold_fut.dispatched()
+    svc.run_until_drained()
+    assert cold_fut.result() == int(log.predict(x[:1])[0])
+    assert svc.stats()["max_group_wait_cycles"] <= 2
+
+
+# ------------------------------------------------------- future lifecycle --
+
+def test_future_timeout_and_cancel():
+    fut = PredictFuture()
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)
+    with pytest.raises(TimeoutError):
+        fut.exception(timeout=0.01)
+    assert fut.cancel() and fut.cancelled() and fut.done()
+    assert fut.cancel()                     # idempotent
+    with pytest.raises(CancelledError):
+        fut.result()
+    with pytest.raises(CancelledError):
+        fut.exception()
+    # cancel() loses once dispatched
+    fut2 = PredictFuture()
+    fut2._bind(np.asarray([7]), 0)
+    assert not fut2.cancel() and not fut2.cancelled()
+    assert fut2.result(timeout=1.0) == 7 and fut2.exception() is None
+
+
+def test_done_reflects_readiness_not_dispatch():
+    """done() must not claim readiness while the device result is still in
+    flight; dispatched() keeps the old meaning."""
+    class FakeBatch:
+        ready = False
+
+        def is_ready(self):
+            return self.ready
+
+        def __array__(self, dtype=None):
+            return np.asarray([3], dtype)
+
+    fut = PredictFuture()
+    batch = FakeBatch()
+    fut._bind(batch, 0)
+    assert fut.dispatched() and not fut.done()   # in flight
+    batch.ready = True
+    assert fut.done()
+    assert fut.result() == 3 and fut.done()
+
+
+def test_cancelled_request_never_dispatches():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=8)
+    futs = [svc.submit("m", np.asarray(x[i])) for i in range(3)]
+    assert futs[1].cancel()
+    assert svc.run_until_drained() == 2      # the cancelled slot was skipped
+    assert futs[0].result() == int(clf.predict(x[:1])[0])
+    with pytest.raises(CancelledError):
+        futs[1].result()
+    assert futs[2].result() == int(clf.predict(x[:3])[2])
+
+
+# ------------------------------------------------------ error propagation --
+
+def test_cycle_error_binds_into_exactly_affected_futures():
+    """A malformed request that slips past submit (here: injected straight
+    into the queue) fails its cycle — the exception lands in exactly that
+    cycle's futures, every other request still resolves, and the service
+    keeps serving."""
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=4)
+    first = [svc.submit("m", np.asarray(x[i])) for i in range(4)]
+    poisoned = [svc.submit("m", np.asarray(x[4]))]
+    bad = PredictRequest(uid=svc.queue.next_uid(), model_name="m",
+                         x=np.zeros(5, np.float32))   # wrong feature width
+    svc.queue.push(bad)
+    poisoned.append(bad.future)
+    poisoned += [svc.submit("m", np.asarray(x[i])) for i in (5, 6)]
+    last = [svc.submit("m", np.asarray(x[i])) for i in range(7, 11)]
+    svc.run_until_drained()
+
+    want = [int(v) for v in clf.predict(x[:11])]
+    assert [f.result() for f in first] == want[:4]          # clean cycle
+    for f in poisoned:                # the failed cycle's 4 slots — exactly
+        assert isinstance(f.exception(), ValueError)
+        with pytest.raises(ValueError):
+            f.result()
+    assert [f.result() for f in last] == want[7:11]          # service alive
+    assert svc.errors == 1 and len(svc.queue) == 0           # zero lost
+
+
+def test_submit_validates_shape():
+    clf = _fitted("conventional")
+    svc = ClassifierService({"m": clf.model}, max_batch=4)
+    with pytest.raises(ValueError, match="feature vector"):
+        svc.submit("m", np.zeros(F + 1))
+    with pytest.raises(ValueError, match="hypervector"):
+        svc.submit("m", np.zeros(F), encoded=True)      # F != D
+    with pytest.raises(ValueError):
+        svc.submit("m", np.zeros((2, F)))               # batch via submits
+    assert len(svc.queue) == 0                          # nothing poisoned
+
+
+def test_submit_normalizes_dtype_no_hidden_executables():
+    """int/f64 submissions (raw AND encoded) must reuse the f32 executables
+    warmup compiled — zero post-warmup compiles for both input forms."""
+    clf = _fitted("conventional")
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")
+    svc = ClassifierService({"m": clf.model}, max_batch=4, buckets=(1, 2, 4))
+    svc.warmup()
+    misses = svc.bucket_cache.stats.misses
+    enc_traces = _encode_jit._cache_size()
+    jfn = dispatch.predict_fn(clf.model)
+    predict_traces = jfn._cache_size()
+
+    futs = [svc.submit("m", np.asarray(x[i], np.float64)) for i in range(3)]
+    futs += [svc.submit("m", np.asarray(h[i], np.float64), encoded=True)
+             for i in range(3)]
+    futs += [svc.submit("m", np.asarray(x[3]).astype(np.int32) * 0 + 1)]
+    svc.run_until_drained()
+    [f.result() for f in futs]
+
+    assert svc.bucket_cache.stats.misses == misses
+    assert _encode_jit._cache_size() == enc_traces
+    assert jfn._cache_size() == predict_traces
+    want = [int(v) for v in clf.predict(x[:3])]
+    assert [f.result() for f in futs[:3]] == want
+
+
+# ------------------------------------------------------ background thread --
+
+def test_serve_forever_background_dispatch():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=8, buckets=(1, 2, 4, 8))
+    svc.warmup()
+    svc.serve_forever()
+    try:
+        assert svc.serving()
+        with pytest.raises(RuntimeError):
+            svc.serve_forever()             # already running
+        futs = [svc.submit("m", np.asarray(x[i])) for i in range(20)]
+        got = [f.result(timeout=30.0) for f in futs]
+    finally:
+        svc.shutdown()
+    assert not svc.serving()
+    assert got == [int(v) for v in clf.predict(x[:20])]
+
+
+def test_shutdown_drains_pending():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=4)
+    futs = [svc.submit("m", np.asarray(x[i])) for i in range(6)]
+    svc.shutdown()                          # not serving: still drains
+    assert [f.result() for f in futs] == [int(v) for v in clf.predict(x[:6])]
+
+
+# ---------------------------------------------------- quantized residency --
+
+def test_quantized_residency_serves_quantized_labels():
+    """register(quantize_bits=8) holds int8 codes on device (<= 0.5x the
+    f32 stored bytes) and serves labels identical to predict_encoded on the
+    quantized-then-materialized model."""
+    clf = _fitted("loghd")
+    x, _ = _data()
+    h = encode_batched(clf.model.enc, x, "cos")
+    svc = ClassifierService(max_batch=8, buckets=(1, 2, 4, 8))
+    svc.register("f32", clf.model)
+    svc.register("int8", clf.model, quantize_bits=8)
+    assert svc.model_bytes("int8") <= 0.5 * svc.model_bytes("f32")
+
+    futs = [svc.submit("int8", np.asarray(h[i]), encoded=True)
+            for i in range(11)]
+    svc.run_until_drained()
+    got = np.asarray([f.result() for f in futs])
+    want = predict_encoded(clf.model.quantized(8).materialized(), h[:11])
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_quantized_and_f32_residency_are_distinct_executables():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService(max_batch=4, buckets=(2, 4))
+    svc.register("f32", clf.model)
+    svc.register("int8", clf.model, quantize_bits=8)
+    assert svc.warmup() == 4                 # 2 models x 2 buckets
+    assert svc.bucket_cache.executables() == 4   # residency extends the key
+    misses = svc.bucket_cache.stats.misses
+    for name in ("f32", "int8"):             # steady state: all cache hits
+        futs = [svc.submit(name, np.asarray(x[i])) for i in range(3)]
+        svc.run_until_drained()
+        [f.result() for f in futs]
+    assert svc.bucket_cache.stats.misses == misses
 
 
 # ---------------------------------------------------------------- buckets --
