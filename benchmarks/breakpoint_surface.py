@@ -1,0 +1,242 @@
+"""Breakpoint surface: max sustained severity per (method, budget, fault
+model).
+
+For every (method, memory budget) cell and every registered device-noise
+model in ``repro.faults``, sweep the model's severity grid through the
+device-resident fault-sweep engine and reduce each curve to its
+**breakpoint** — the interpolated max severity at which the method still
+holds clean accuracy minus ``drop`` (``benchmarks.breakpoints
+.interpolate_breakpoint``).  The surface is the robustness claim
+generalized off the iid axis: the paper's Fig. 3 measures one noise model,
+this measures the zoo.
+
+Severity means what each fault model says it means (per-bit flip rate for
+iid/asymmetric, row-hit rate for burst, stuck-cell rate for stuck_at, READ
+COUNT for drift), so breakpoints are comparable within a fault model's
+column, not across columns.
+
+Appends one record per run to ``BENCH_breakpoints.json`` at the repo root
+(the ``write_record`` trajectory shape shared with the other benches) and
+enforces two CI gates:
+
+  * **ordering** — LogHD's iid breakpoint >= SparseHD's at matched memory
+    (the paper's C2 robustness claim, now a regression gate).  Measured at
+    the paper's deployment precision, 1-bit sign quantization, over the
+    operating grid ``GATE_GRID``.  Reproduction note: on these (easy,
+    synthetic) fixtures SparseHD's prototype matrix is so over-provisioned
+    that it never breaks inside the operating grid, so the gate binds as a
+    non-regression floor — LogHD must sustain the full grid too (a
+    regression that moves LogHD's breakpoint inside the grid fails); the
+    paper's 2.5-3x superiority ratio is not reproduced here and the full
+    curves are recorded so the trend stays visible.
+  * **zero recompiles** — running the whole surface a second time adds no
+    sweep executables and retraces nothing: severity grids are mapped
+    in-graph, one executable per (model family, fault model).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.breakpoints import interpolate_breakpoint
+from benchmarks.common import (dataset_fixture, hybrid_for_budget,
+                               loghd_for_budget, sparsehd_for_budget)
+from benchmarks.fault_sweep_bench import write_record
+from repro.core import evaluate as ev
+from repro.faults import available_fault_models
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_breakpoints.json")
+
+# Severity grids per fault model (each starts at 0: the clean anchor the
+# breakpoint target is computed from).  Drift's grid is READ COUNTS.
+SEVERITY_GRIDS = {
+    "iid": [0.0, 0.02, 0.05, 0.1, 0.15, 0.2, 0.3],
+    "asymmetric": [0.0, 0.02, 0.05, 0.1, 0.15, 0.2, 0.3],
+    "burst": [0.0, 0.05, 0.1, 0.2, 0.3, 0.5, 0.7],
+    "stuck_at": [0.0, 0.05, 0.1, 0.2, 0.3, 0.4, 0.6],
+    "drift": [0.0, 25.0, 50.0, 100.0, 200.0, 400.0, 800.0],
+}
+
+DROP = 0.10                  # breakpoint target: clean accuracy - DROP
+# Ordering gate runs at the paper's deployment precision: 1-bit (sign)
+# codes, iid flips, over the operating grid below.  The surface itself
+# stays at the multi-bit default where the zoo's plane-dependent models
+# (asymmetric, stuck_at) are informative.
+GATE_BITS = 1
+GATE_GRID = [0.0, 0.05, 0.1, 0.2, 0.3]
+# The surface runs fault scope "hv" (bulk hypervector memory corrupted;
+# profiles/sigma_inv ECC-protected) — the paper's deployment story and the
+# scope under which the C2 ordering claim (LogHD >= SparseHD breakpoints at
+# matched memory) is stated.  Scope "all" additionally corrupts LogHD's
+# C*n-word profiles, which measures a different (unprotected-decoder)
+# deployment; fig3 reports both.
+SCOPE = "hv"
+
+
+def _methods(fx, budget: float):
+    return [
+        ("loghd_k2", loghd_for_budget(fx, budget, k=2).model),
+        ("sparsehd", sparsehd_for_budget(fx, budget).model),
+        ("hybrid", hybrid_for_budget(fx, budget).model),
+    ]
+
+
+def _cache_snapshot() -> dict:
+    """(sweep-cache key) -> compiled-executable count, for the
+    zero-recompile gate."""
+    return {k: fn._cache_size() for k, fn in ev._SWEEP_JIT_CACHE.items()}
+
+
+def _surface_pass(methods, fault_names, bits, h, y, key, trials):
+    """One full pass over the (method, fault model) surface; returns
+    per-cell mean-accuracy curves."""
+    out = {}
+    for mname, model in methods:
+        out[mname] = {}
+        for fname in fault_names:
+            grid = SEVERITY_GRIDS[fname]
+            accs = ev.sweep_under_flips(model, bits, grid, h, y, key,
+                                        n_trials=trials, scope=SCOPE,
+                                        fault_model=fname)
+            out[mname][fname] = accs.mean(axis=1)
+    return out
+
+
+def _gate_pass(methods, h, y, key, trials):
+    """LogHD-vs-SparseHD iid curves at GATE_BITS over GATE_GRID (the
+    ordering gate's deployment point)."""
+    out = {}
+    for mname, model in methods:
+        if mname == "hybrid":
+            continue
+        accs = ev.sweep_under_flips(model, GATE_BITS, GATE_GRID, h, y, key,
+                                    n_trials=trials, scope=SCOPE,
+                                    fault_model="iid")
+        out[mname] = accs.mean(axis=1)
+    return out
+
+
+def run(quick: bool = True, dataset: str = "isolet", bits: int = 4,
+        drop: float = DROP):
+    fx = dataset_fixture(dataset)
+    h, y = fx["h_te"], jnp.asarray(fx["y_te"])
+    key = jax.random.PRNGKey(0)
+    budgets = [0.2] if quick else [0.1, 0.2, 0.4]
+    trials = 2 if quick else 5
+    fault_names = available_fault_models()
+
+    surface = {}
+    gates = {}
+    ok = True
+    for budget in budgets:
+        methods = _methods(fx, budget)
+
+        # pass 1 compiles the surface (warmup); pass 2 must be pure cache
+        # hits — severity grids are traced values inside one executable per
+        # (family, fault model), so re-running the surface adds nothing.
+        _surface_pass(methods, fault_names, bits, h, y, key, trials)
+        _gate_pass(methods, h, y, key, trials)
+        warm = _cache_snapshot()
+        curves = _surface_pass(methods, fault_names, bits, h, y, key,
+                               trials)
+        gate_curves = _gate_pass(methods, h, y, key, trials)
+        after = _cache_snapshot()
+        recompiles = (sum(after.values()) - sum(warm.values())
+                      + 1000 * (len(after) - len(warm)))
+
+        cell = {}
+        for mname, per_fault in curves.items():
+            cell[mname] = {}
+            for fname, accs in per_fault.items():
+                grid = SEVERITY_GRIDS[fname]
+                clean = float(accs[0])
+                pstar = float(interpolate_breakpoint(
+                    list(grid), [float(a) for a in accs], clean - drop))
+                cell[mname][fname] = {
+                    "clean": round(clean, 4),
+                    "pstar": round(pstar, 5),
+                    "mean_accs": [round(float(a), 4) for a in accs],
+                }
+        surface[str(budget)] = cell
+
+        gate_pstar = {}
+        for mname, accs in gate_curves.items():
+            clean = float(accs[0])
+            gate_pstar[mname] = round(float(interpolate_breakpoint(
+                list(GATE_GRID), [float(a) for a in accs], clean - drop)), 5)
+        log_iid = gate_pstar["loghd_k2"]
+        sp_iid = gate_pstar["sparsehd"]
+        order_ok = log_iid >= sp_iid
+        recompile_ok = recompiles == 0
+        ok = ok and order_ok and recompile_ok
+        gates[str(budget)] = {
+            "gate_bits": GATE_BITS,
+            "loghd_iid_pstar": log_iid,
+            "sparsehd_iid_pstar": sp_iid,
+            "ratio": round(log_iid / sp_iid, 2) if sp_iid > 0
+            else float("inf"),
+            "gate_curves": {m: [round(float(a), 4) for a in accs]
+                            for m, accs in gate_curves.items()},
+            "ordering_pass": order_ok,
+            "sweep_executables": len(after),
+            "post_warmup_recompiles": int(recompiles),
+            "zero_recompile_pass": recompile_ok,
+        }
+
+    record = {
+        "bench": "breakpoint_surface",
+        "quick": bool(quick),
+        "dataset": dataset, "bits": bits, "scope": SCOPE, "drop": drop,
+        "n_trials": trials, "budgets": budgets,
+        "fault_models": list(fault_names),
+        "severity_grids": SEVERITY_GRIDS,
+        "gate_bits": GATE_BITS, "gate_grid": GATE_GRID,
+        "surface": surface,
+        "gates": gates,
+        "all_gates_pass": bool(ok),
+        "backend": jax.default_backend(),
+        "unix_time": int(time.time()),
+    }
+    return record
+
+
+def main(quick: bool = True):
+    record = run(quick=quick)
+    path = write_record(record, BENCH_JSON)
+    print("# breakpoint surface: p* (max severity at clean-10pts) per "
+          "(budget, method, fault model)")
+    print("budget,method," + ",".join(record["fault_models"]))
+    for budget, cell in record["surface"].items():
+        for mname, per_fault in cell.items():
+            print(f"{budget},{mname}," + ",".join(
+                str(per_fault[f]["pstar"]) for f in record["fault_models"]))
+    failures = []
+    for budget, g in record["gates"].items():
+        print(f"# budget {budget}: loghd/sparsehd iid p* ratio at "
+              f"{g['gate_bits']}-bit {g['ratio']} ({g['loghd_iid_pstar']} "
+              f"vs {g['sparsehd_iid_pstar']}); "
+              f"{g['sweep_executables']} sweep executables, "
+              f"{g['post_warmup_recompiles']} post-warmup recompiles")
+        if not g["ordering_pass"]:
+            failures.append(
+                f"budget {budget}: LogHD iid breakpoint "
+                f"{g['loghd_iid_pstar']} < SparseHD {g['sparsehd_iid_pstar']}"
+                f" at matched memory")
+        if not g["zero_recompile_pass"]:
+            failures.append(
+                f"budget {budget}: {g['post_warmup_recompiles']} post-warmup"
+                f" recompiles across the surface (severity must stay "
+                f"in-graph)")
+    print(f"# trajectory appended to {path}")
+    if failures:
+        raise SystemExit("breakpoint-surface gate failed: "
+                         + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,31 @@ def parse_fig3(lines):
     return rows
 
 
+def interpolate_breakpoint(ps, accs, target):
+    """Break point of one accuracy curve, linearly interpolated.
+
+    ``(ps, accs)`` is the curve sorted by p.  Walks forward until the first
+    grid point below ``target``; the break point is then the linear
+    interpolation between the last passing point and that first failure —
+    where the straight line between them crosses ``target`` — instead of
+    snapping down to the last grid point (a coarse grid used to
+    under-report p* by up to a full grid step).  A curve that never fails
+    returns its last grid p; one that fails at its first point returns
+    that p.  Recovery after the first failure is ignored (the physical
+    curve is monotone; a bounce is trial noise)."""
+    pstar = ps[0]
+    for (p_lo, a_lo), (p_hi, a_hi) in zip(zip(ps, accs),
+                                          zip(ps[1:], accs[1:])):
+        if a_lo < target:
+            break
+        pstar = p_lo
+        if a_hi < target:
+            frac = (a_lo - target) / (a_lo - a_hi)
+            return p_lo + frac * (p_hi - p_lo)
+        pstar = p_hi
+    return pstar
+
+
 def breakpoints(rows, drop: float = 0.10):
     curves = collections.defaultdict(dict)
     for ds, budget, bits, scope, method, p, acc in rows:
@@ -43,15 +68,10 @@ def breakpoints(rows, drop: float = 0.10):
         if 0.0 not in curve:
             continue
         target = curve[0.0] - drop
-        ok = [p for p, a in sorted(curve.items()) if a >= target]
-        # p* = largest p with accuracy above target AND no earlier failure
-        pstar = 0.0
-        for p, a in sorted(curve.items()):
-            if a >= target:
-                pstar = p
-            else:
-                break
-        out[key] = (curve[0.0], pstar)
+        pts = sorted(curve.items())
+        ps = [p for p, _ in pts]
+        accs = [a for _, a in pts]
+        out[key] = (curve[0.0], interpolate_breakpoint(ps, accs, target))
     return out
 
 

@@ -9,6 +9,10 @@
   fault_sweep_bench  — fused sweep engine vs frozen legacy per-trial loop;
                        appends a perf-trajectory record to
                        BENCH_fault_sweep.json at the repo root
+  breakpoint_surface — max sustained severity per (method, budget, fault
+                       model) across the repro.faults zoo; appends to
+                       BENCH_breakpoints.json, gated on LogHD >= SparseHD
+                       under iid and zero post-warmup recompiles
   serve_bench        — continuous-batched classifier service vs naive
                        one-request-per-call (conventional vs LogHD at
                        matched memory); appends p50/p99 latency and
@@ -37,13 +41,15 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (fault_sweep_bench, fig3_bitflip, fig4_dim_quant,
-                            fig5_alphabet, fig6_hybrid, kernels_bench,
-                            serve_bench, table2_efficiency)
+    from benchmarks import (breakpoint_surface, fault_sweep_bench,
+                            fig3_bitflip, fig4_dim_quant, fig5_alphabet,
+                            fig6_hybrid, kernels_bench, serve_bench,
+                            table2_efficiency)
     suites = {
         "table2": table2_efficiency,
         "kernels": kernels_bench,
         "fault_sweep": fault_sweep_bench,
+        "breakpoint_surface": breakpoint_surface,
         "serve": serve_bench,
         "fig5": fig5_alphabet,
         "fig4": fig4_dim_quant,

@@ -140,16 +140,31 @@ def corrupt_dequant(q: QTensor, p, key: jax.Array,
 
 def corrupt_materialize(model: HDModel, p, key: jax.Array,
                         scope: str = "all",
-                        use_kernel: Optional[bool] = None) -> HDModel:
+                        use_kernel: Optional[bool] = None,
+                        fault_model=None) -> HDModel:
     """Corrupt + materialize a typed model's stored state in one pass.
 
-    The fault-sweep engine's per-trial body.  On qualifying backends every
-    QTensor leaf goes through the fused ``flip_corrupt`` kernel (corrupt and
-    dequantize in one HBM pass); elsewhere this is exactly
-    ``model.corrupted(p, key, scope).materialized()``, preserving the
-    dict-path per-leaf key assignment bit for bit."""
+    The fault-sweep engine's per-trial body.  ``fault_model`` selects a
+    ``repro.faults`` device-noise model (``p`` is then its severity);
+    only kernel-eligible models — iid, whose corruption IS the fused
+    PRNG->XOR->dequantize the ``flip_corrupt`` kernel implements — ride
+    the Pallas path on qualifying backends.  Every other model (and every
+    model off-TPU) takes the jnp path: one trace per (family, fault
+    model), the severity staying a traced scalar, so a sweep never
+    retraces across its grid.  With ``fault_model=None`` this is exactly
+    the legacy behaviour — the fused kernel on qualifying backends,
+    ``model.corrupted(p, key, scope).materialized()`` elsewhere,
+    preserving the dict-path per-leaf key assignment bit for bit."""
     if use_kernel is None:
         use_kernel = kernels_qualify()
+    if fault_model is not None and not fault_model.kernel_eligible:
+        from repro.core.faults import fault_skip_set
+        skip = fault_skip_set(scope)
+        rest = {k: v for k, v in model.to_dict().items() if k != "enc"}
+        rest = fault_model.corrupt(rest, p, key, skip=skip)
+        rest["enc"] = model.enc
+        aux = {n: getattr(model, n) for n in model.aux_fields}
+        return type(model).from_dict(rest, **aux).materialized()
     if not use_kernel:
         return model.corrupted(p, key, scope).materialized()
 

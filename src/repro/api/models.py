@@ -139,24 +139,32 @@ class HDModel:
         return self.replace(**updates) if updates else self
 
     def corrupted_materialized(self, p, key: jax.Array,
-                               scope: str = "all") -> "HDModel":
+                               scope: str = "all",
+                               fault_model=None) -> "HDModel":
         """Corrupt + dequantize in one step — the fault-sweep trial body.
 
         Dispatches to the fused ``flip_corrupt`` Pallas kernel on compiled
         TPU backends (one HBM pass per stored leaf) and is exactly
-        ``corrupted(p, key, scope).materialized()`` elsewhere."""
+        ``corrupted(p, key, scope).materialized()`` elsewhere.
+        ``fault_model`` selects a ``repro.faults`` device-noise model
+        (``p`` becomes its severity); only kernel-eligible models (iid)
+        ride the Pallas path."""
         from repro.api.dispatch import corrupt_materialize
-        return corrupt_materialize(self, p, key, scope)
+        return corrupt_materialize(self, p, key, scope,
+                                   fault_model=fault_model)
 
     def sweep_under_flips(self, bits: int, p_grid, h_test: jax.Array,
                           y_test, key: jax.Array, *, n_trials: int = 3,
-                          scope: str = "all", p_chunk=None):
+                          scope: str = "all", p_chunk=None,
+                          fault_model=None):
         """(|p_grid|, n_trials) accuracy matrix from the device-resident
-        fault-sweep engine (one jit, single host transfer)."""
+        fault-sweep engine (one jit, single host transfer).  ``fault_model``
+        names a registered ``repro.faults`` device-noise model; ``p_grid``
+        is then its severity grid."""
         from repro.core.evaluate import sweep_under_flips
         return sweep_under_flips(self, bits, p_grid, h_test, y_test, key,
                                  n_trials=n_trials, scope=scope,
-                                 p_chunk=p_chunk)
+                                 p_chunk=p_chunk, fault_model=fault_model)
 
     # --------------------------------------------------------- interface --
     def predict_encoded(self, h: jax.Array) -> jax.Array:

@@ -146,12 +146,14 @@ class HDClassifier:
 
     def sweep_under_flips(self, bits: int, p_grid, h_test, y_test, key, *,
                           n_trials: int = 3, scope: str = "all",
-                          p_chunk=None):
+                          p_chunk=None, fault_model=None):
         """(|p_grid|, n_trials) accuracy matrix from the device-resident
-        fault-sweep engine (one jit, single host transfer)."""
+        fault-sweep engine (one jit, single host transfer).  ``fault_model``
+        names a registered ``repro.faults`` device-noise model (or passes a
+        parameterized instance); ``p_grid`` is then its severity grid."""
         return self._require_model().sweep_under_flips(
             bits, p_grid, h_test, y_test, key, n_trials=n_trials,
-            scope=scope, p_chunk=p_chunk)
+            scope=scope, p_chunk=p_chunk, fault_model=fault_model)
 
     def model_bits(self, bits: int) -> int:
         return self._require_model().model_bits(bits)

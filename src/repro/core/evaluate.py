@@ -105,12 +105,26 @@ def pad_p_grid(p_arr: jax.Array, chunk: int) -> jax.Array:
     return p_arr.reshape(n_chunks, chunk)
 
 
-# One compiled sweep executable per (predict path, scope, bits).  Shape
-# specialization within an entry is handled by jax.jit itself.
+# One compiled sweep executable per (predict path, scope, bits, fault
+# model).  Shape specialization within an entry is handled by jax.jit
+# itself; fault models are frozen dataclasses, so equal parameters reuse
+# one executable across the whole severity grid.
 _SWEEP_JIT_CACHE: dict = {}
 
 
-def _sweep_fn(pred: Callable, scope: str, bits: int) -> Callable:
+def resolve_fault_model(fault_model):
+    """Normalize a ``fault_model`` argument: None stays None (the legacy
+    iid path, exact backward compatibility), a string goes through the
+    ``repro.faults`` registry, and a ``FaultModel`` instance passes
+    through."""
+    if fault_model is None or not isinstance(fault_model, str):
+        return fault_model
+    from repro.faults import make_fault_model
+    return make_fault_model(fault_model)
+
+
+def _sweep_fn(pred: Callable, scope: str, bits: int,
+              fault_model=None) -> Callable:
     """Build (and cache) the jit-compiled sweep executable.
 
     The compiled graph computes, fully on device:
@@ -127,7 +141,7 @@ def _sweep_fn(pred: Callable, scope: str, bits: int) -> Callable:
     instead of streaming them once per grid point.  Quantization is part of
     the graph, so no eager per-leaf work remains on the host.
     """
-    cache_key = (pred, scope, bits)
+    cache_key = (pred, scope, bits, fault_model)
     fn = _SWEEP_JIT_CACHE.get(cache_key)
     if fn is not None:
         return fn
@@ -136,7 +150,8 @@ def _sweep_fn(pred: Callable, scope: str, bits: int) -> Callable:
         qmodel = model.quantized(bits)
 
         def one(p, sub):
-            preds = pred(qmodel.corrupted_materialized(p, sub, scope), h)
+            preds = pred(qmodel.corrupted_materialized(
+                p, sub, scope, fault_model=fault_model), h)
             return jnp.mean((preds == y).astype(jnp.float32))
 
         per_chunk = jax.vmap(
@@ -152,7 +167,8 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
                       h_test: jax.Array, y_test, key: jax.Array, *,
                       n_trials: int = 3, scope: str = "all",
                       predict_encoded: Optional[Callable] = None,
-                      p_chunk: Optional[int] = None) -> np.ndarray:
+                      p_chunk: Optional[int] = None,
+                      fault_model=None) -> np.ndarray:
     """Full (|p_grid|, n_trials) accuracy matrix in one device-resident jit.
 
     Quantizes the stored model once, then runs every (p, trial) grid point
@@ -168,6 +184,15 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
     overrides the family's own ``(model, h) -> labels`` predict path (pass a
     stable module-level function, not a fresh lambda per call, or every call
     re-traces).  Scalar convenience wrapper: ``evaluate_under_flips``.
+
+    ``fault_model`` selects a registered device-noise model from
+    ``repro.faults`` — a name (``"asymmetric"``, ``"burst"``,
+    ``"stuck_at"``, ``"drift"``) or a parameterized ``FaultModel``
+    instance; ``p_grid`` is then that model's *severity* grid (row-hit
+    rate for burst, read count for drift, ...), mapped in-graph exactly
+    like the iid p-grid.  The default (None) is the legacy iid flip path,
+    bit-for-bit unchanged; passing ``"iid"`` draws the same masks
+    key-for-key through the registry.
 
     >>> import jax, jax.numpy as jnp
     >>> from repro.api import make_classifier
@@ -199,7 +224,8 @@ def sweep_under_flips(model, bits: int, p_grid: Sequence[float],
     n_chunks = p_chunks.shape[0]
 
     tkeys = trial_keys(key, n_trials)
-    sweep = _sweep_fn(pred, scope, int(bits))
+    sweep = _sweep_fn(pred, scope, int(bits),
+                      resolve_fault_model(fault_model))
     out = sweep(model, jnp.asarray(h_test), jnp.asarray(y_test),
                 p_chunks, tkeys)
     out = out.reshape(n_chunks * chunk, n_trials)[:n_p]

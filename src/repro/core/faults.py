@@ -59,27 +59,57 @@ def packed_flip_mask(key: jax.Array, p, shape, nbits: int,
     return mask
 
 
+def word_dtypes(bits: int) -> tuple:
+    """(unsigned mask dtype, signed storage dtype) for `bits`-bit codes.
+
+    Codes up to 8 bits live in int8 words with uint8 masks (the historical
+    path, bit-for-bit unchanged); 8 < bits <= 16 widens to int16/uint16.
+    Wider codes raise — nothing in the repo stores them.
+    """
+    if bits <= 8:
+        return jnp.uint8, jnp.int8
+    if bits <= 16:
+        return jnp.uint16, jnp.int16
+    raise ValueError(
+        f"integer fault injection supports at most 16-bit codes "
+        f"(int16 words, uint16 masks); got a {bits}-bit QTensor")
+
+
+def codes_to_words(q: QTensor) -> jax.Array:
+    """A QTensor's codes as unsigned b-bit memory words (high bits zeroed).
+
+    The representation every integer fault model corrupts: XOR/AND/OR on
+    these words is exactly what a fault does to the stored bit pattern."""
+    udtype, _ = word_dtypes(q.bits)
+    return q.codes.astype(udtype) & udtype((1 << q.bits) - 1)
+
+
+def words_to_codes(u: jax.Array, q: QTensor) -> QTensor:
+    """Read corrupted b-bit words back as a QTensor (sign-extend from bit
+    b-1 into the signed storage dtype, exactly as the decoder would)."""
+    b = q.bits
+    udtype, sdtype = word_dtypes(b)
+    if b == 1:
+        return QTensor(u.astype(sdtype), q.scale, 1)
+    width = jnp.iinfo(udtype).bits
+    full = (1 << width) - 1
+    sign = udtype(1 << (b - 1))
+    ext = jnp.where((u & sign) != 0, u | udtype((full << b) & full), u)
+    return QTensor(ext.astype(sdtype), q.scale, b)
+
+
 def flip_bits_int(q: QTensor, p, key: jax.Array) -> QTensor:
     """Flip each of the b stored bits of every code independently w.p. p.
 
     Codes are interpreted as b-bit two's-complement words: we XOR a random
     b-bit mask and re-interpret, exactly as a corrupted memory word would be
-    read back.
+    read back.  Codes up to 8 bits take the uint8 mask path (int8 storage);
+    8 < bits <= 16 takes a uint16 mask path with int16 storage.
     """
-    b = q.bits
-    if b > 8:
-        raise ValueError(
-            f"flip_bits_int stores codes as int8 words and flips at most 8 "
-            f"bit planes; got a {b}-bit QTensor — widening to 16-bit codes "
-            f"needs a uint16 mask path, not a silent uint8 truncation")
-    u = q.codes.astype(jnp.uint8) & jnp.uint8((1 << b) - 1)
-    u = u ^ packed_flip_mask(key, p, q.codes.shape, b, jnp.uint8)
-    if b == 1:
-        return QTensor(u.astype(jnp.int8), q.scale, 1)
-    # sign-extend b-bit word back to int8
-    sign = jnp.uint8(1 << (b - 1))
-    ext = jnp.where((u & sign) != 0, u | jnp.uint8(0xFF << b & 0xFF), u)
-    return QTensor(ext.astype(jnp.int8), q.scale, b)
+    udtype, _ = word_dtypes(q.bits)
+    u = codes_to_words(q)
+    u = u ^ packed_flip_mask(key, p, q.codes.shape, q.bits, udtype)
+    return words_to_codes(u, q)
 
 
 def flip_bits_f32(w: jax.Array, p, key: jax.Array) -> jax.Array:

@@ -1,0 +1,46 @@
+"""repro.faults — the fault-model zoo (ROADMAP: robustness beyond iid).
+
+Every robustness figure in the paper sweeps iid bit flips; the deployment
+stories behind the resilience claim are *device* noise — stuck-at cells,
+row/word-line bursts, asymmetric 0->1 / 1->0 upsets under voltage
+scaling, conductance drift over repeated reads.  This package turns
+``core/faults.py``'s single flip path into a registry of parameterized,
+jit-traceable fault models that all compile through the one-jit sweep
+engine (``core.evaluate.sweep_under_flips(..., fault_model=...)``).
+
+Module map
+----------
+  base.py       ``FaultModel`` (frozen dataclass, hashable — a jit cache
+                key) + the stored-leaf tree walker, key-for-key identical
+                to ``core.faults.flip_tree``.
+  models.py     the five built-ins: ``iid`` (bit-exact legacy path,
+                Pallas-kernel eligible), ``asymmetric``, ``burst``,
+                ``stuck_at``, ``drift``.
+  registry.py   ``register_fault_model`` / ``make_fault_model`` /
+                ``available_fault_models`` — the same string-keyed
+                registry shape as ``repro.api``'s method registry.
+
+The severity contract: every model corrupts at a scalar *severity* that
+may be a traced value (the sweep maps the grid in-graph); severity 0 is
+the identity; what severity means is model-specific (flip rate, row-hit
+rate, stuck-cell rate, read count) and documented per model.
+
+``benchmarks/breakpoint_surface.py`` sweeps (method x budget x fault
+model) and records each cell's breakpoint severity into
+``BENCH_breakpoints.json`` — the paper's 2.5-3.0x iid resilience number
+generalized to a Pareto surface.
+"""
+
+from repro.faults.base import FaultModel, corrupt_tree
+from repro.faults.models import (AsymmetricFlip, BurstFlip, DriftFlip,
+                                 IIDFlip, StuckAt)
+from repro.faults.registry import (available_fault_models,
+                                   get_fault_model_factory, make_fault_model,
+                                   register_fault_model)
+
+__all__ = [
+    "FaultModel", "corrupt_tree",
+    "IIDFlip", "AsymmetricFlip", "BurstFlip", "StuckAt", "DriftFlip",
+    "register_fault_model", "make_fault_model", "available_fault_models",
+    "get_fault_model_factory",
+]

@@ -1,0 +1,116 @@
+"""Fault-model base class and the shared stored-leaf tree walker.
+
+A fault model is a *parameterized, jit-traceable* corruption of a model's
+stored memory.  Parameters (asymmetry ratios, burst row width, per-read
+drift rate, ...) are static python values fixed at construction; the one
+knob every model shares is **severity** — a scalar that may be a traced
+value, which is what lets ``core.evaluate.sweep_under_flips`` map a whole
+severity grid inside one compiled executable, exactly like the iid p-grid.
+
+What severity *means* is model-specific (documented per model in
+``repro.faults.models``): a per-bit flip probability for ``iid`` and
+``asymmetric``, a row-hit probability for ``burst``, a stuck-cell
+probability for ``stuck_at``, and a read count for ``drift``.  Severity 0
+is always the identity.
+
+Models are frozen dataclasses: equal parameters compare (and hash) equal,
+so a fault model can key a jit cache — ``_SWEEP_JIT_CACHE`` compiles one
+executable per (model family, scope, bits, fault model) and reuses it
+across the whole severity grid and every trial.
+
+The tree walker below mirrors ``core.faults.flip_tree`` key-for-key: one
+``jax.random.split`` over the QTensor-aware leaf list, leaves named in
+``skip`` protected, QTensor leaves corrupted as packed integer words and
+float leaves on their IEEE-754 bit pattern.  ``IIDFlip`` plugs the legacy
+``flip_bits_int``/``flip_bits_f32`` into this walker, which is why the
+``iid`` model is bit-exact with the pre-registry ``corrupt_model`` chain
+(pinned by ``tests/test_fault_models.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor
+
+__all__ = ["FaultModel", "corrupt_tree"]
+
+
+def corrupt_tree(tree, severity, key: jax.Array,
+                 qtensor_fn: Callable, float_fn: Callable, *,
+                 skip=()):
+    """Apply per-leaf corruption to every stored leaf of a pytree.
+
+    The walk order, leaf-key assignment (one ``jax.random.split`` over the
+    flattened leaves) and skip semantics are identical to
+    ``core.faults.flip_tree`` — the reproducibility contract every fault
+    model inherits.  ``qtensor_fn(q, severity, key)`` handles integer-code
+    leaves, ``float_fn(w, severity, key)`` handles f32 leaves; integer
+    leaves named in ``skip`` (keep indices, codebooks) are structural
+    metadata and pass through untouched.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QTensor))[0]
+    keys = jax.random.split(key, max(len(leaves_with_paths), 1))
+
+    def name_of(path):
+        last = path[-1]
+        return getattr(last, "key", None)
+
+    _, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, QTensor))
+    new_leaves = []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        name = name_of(path)
+        if name in skip:
+            new_leaves.append(leaf)
+        elif isinstance(leaf, QTensor):
+            new_leaves.append(qtensor_fn(leaf, severity, keys[i]))
+        elif jnp.issubdtype(leaf.dtype, jnp.floating):
+            new_leaves.append(float_fn(leaf, severity, keys[i]))
+        else:
+            new_leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Base class for registered device-noise models.
+
+    Subclasses are frozen dataclasses whose fields are the model's static
+    parameters, and implement the two leaf-level hooks:
+
+      ``corrupt_qtensor(q, severity, key) -> QTensor``
+      ``corrupt_f32(w, severity, key) -> jax.Array``
+
+    ``severity`` may be a traced scalar (the sweep engine maps the grid
+    in-graph); all other parameters are static.  ``kernel_eligible`` marks
+    models whose corruption is plain iid bit flips — only those ride the
+    fused ``flip_corrupt`` Pallas path in ``api.dispatch
+    .corrupt_materialize``; every other model takes the jnp path (same
+    trace-once discipline, no kernel).
+    """
+
+    name: ClassVar[str] = "base"
+    kernel_eligible: ClassVar[bool] = False
+
+    def corrupt_qtensor(self, q: QTensor, severity, key: jax.Array
+                        ) -> QTensor:
+        raise NotImplementedError
+
+    def corrupt_f32(self, w: jax.Array, severity, key: jax.Array
+                    ) -> jax.Array:
+        raise NotImplementedError
+
+    def corrupt(self, tree, severity, key: jax.Array, *, skip=()):
+        """Corrupt every stored leaf of ``tree`` at ``severity``.
+
+        Leaf walk, key assignment and ``skip`` protection follow
+        ``core.faults.flip_tree`` exactly (see ``corrupt_tree``)."""
+        return corrupt_tree(tree, severity, key,
+                            self.corrupt_qtensor, self.corrupt_f32,
+                            skip=skip)

@@ -1,0 +1,251 @@
+"""The built-in device-noise models.
+
+Each model is a frozen-dataclass ``FaultModel`` whose parameters are static
+and whose **severity** knob is a scalar that may be traced (the sweep
+engine maps the severity grid in-graph).  Deployment stories, following
+"In-memory hyperdimensional computing" (Karunaratne et al.) and the LogHD
+paper's ASIC/voltage-scaling framing:
+
+  ``iid``         every stored bit flips independently w.p. severity — the
+                  paper's Sec. IV-A protocol, bit-exact with the legacy
+                  ``core.faults`` flip chain, Pallas-kernel eligible.
+  ``asymmetric``  voltage-scaled SRAM/ReRAM: 0->1 and 1->0 upsets at
+                  different rates — p01 = severity * p01_scale,
+                  p10 = severity * p10_scale, drawn independently per bit
+                  plane.
+  ``burst``       row/word-line faults: a bernoulli draw per row of
+                  ``row_size`` consecutive words gates a high-rate
+                  (``burst_rate``) flip plane within the row; severity is
+                  the row-hit probability.
+  ``stuck_at``    fabrication/wear-out stuck cells: each bit is stuck with
+                  probability severity (``stuck0_frac`` of them at 0, the
+                  rest at 1).  The map is a pure function of the key, so
+                  one trial's map persists across reads — re-applying with
+                  the same key is idempotent.
+  ``drift``       conductance drift over repeated reads: each read flips
+                  each bit w.p. ``per_read_p``; severity is the (traced)
+                  READ COUNT and the cumulative disturb parity has the
+                  closed form p_eff(r) = (1 - (1 - 2p)^r) / 2, which
+                  saturates at 1/2 as r -> inf.
+
+Severity 0 is the identity for every model.  All corruption is built on
+the packed-mask machinery (``core.faults.packed_flip_mask`` + the
+``codes_to_words``/``words_to_codes`` view), so transient memory stays
+O(|codes|) and everything compiles through ``sweep_under_flips`` with the
+severity grid in-graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.faults import (codes_to_words, flip_bits_f32, flip_bits_int,
+                               packed_flip_mask, word_dtypes, words_to_codes)
+from repro.core.quantize import QTensor
+from repro.faults.base import FaultModel
+
+__all__ = ["IIDFlip", "AsymmetricFlip", "BurstFlip", "StuckAt", "DriftFlip"]
+
+
+def _f32_words(w: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(w.astype(jnp.float32), jnp.uint32)
+
+
+def _words_f32(u: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class IIDFlip(FaultModel):
+    """Independent bit flips at rate = severity (the paper's protocol).
+
+    Delegates to the legacy ``flip_bits_int``/``flip_bits_f32`` pair, so a
+    sweep with ``fault_model="iid"`` is bit-exact, key-for-key, with the
+    pre-registry ``corrupt_model`` chain — and kernel-eligible: on
+    compiled TPU backends ``api.dispatch.corrupt_materialize`` keeps this
+    model on the fused ``flip_corrupt`` Pallas path.
+    """
+
+    name: ClassVar[str] = "iid"
+    kernel_eligible: ClassVar[bool] = True
+
+    def corrupt_qtensor(self, q: QTensor, severity, key):
+        return flip_bits_int(q, severity, key)
+
+    def corrupt_f32(self, w: jax.Array, severity, key):
+        return flip_bits_f32(w, severity, key)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsymmetricFlip(FaultModel):
+    """Asymmetric 0->1 / 1->0 upsets (voltage-scaling failure mode).
+
+    A stored 0 bit reads back 1 w.p. ``severity * p01_scale``; a stored 1
+    bit reads back 0 w.p. ``severity * p10_scale`` — independent draws per
+    bit plane.  The defaults model the common SRAM regime where discharge
+    (1->0) dominates under scaled supply voltage; flip the scales for the
+    opposite technology.  ``iid`` is the special case p01 == p10.
+    """
+
+    p01_scale: float = 0.25
+    p10_scale: float = 1.0
+
+    name: ClassVar[str] = "asymmetric"
+
+    def __post_init__(self):
+        if self.p01_scale < 0 or self.p10_scale < 0:
+            raise ValueError("asymmetric scales must be >= 0")
+
+    def _flip_words(self, u, nbits, udtype, severity, key):
+        k01, k10 = jax.random.split(key)
+        p01 = jnp.clip(severity * self.p01_scale, 0.0, 1.0)
+        p10 = jnp.clip(severity * self.p10_scale, 0.0, 1.0)
+        m01 = packed_flip_mask(k01, p01, u.shape, nbits, udtype)
+        m10 = packed_flip_mask(k10, p10, u.shape, nbits, udtype)
+        return u ^ ((~u & m01) | (u & m10))
+
+    def corrupt_qtensor(self, q: QTensor, severity, key):
+        udtype, _ = word_dtypes(q.bits)
+        u = self._flip_words(codes_to_words(q), q.bits, udtype, severity,
+                             key)
+        return words_to_codes(u, q)
+
+    def corrupt_f32(self, w: jax.Array, severity, key):
+        u = _f32_words(w)
+        return _words_f32(self._flip_words(u, 32, jnp.uint32, severity, key))
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstFlip(FaultModel):
+    """Row/word-line-correlated bursts (in-memory-computing fault mode).
+
+    Memory is viewed as rows of ``row_size`` consecutive words; each row
+    is hit w.p. severity (one bernoulli draw per row), and within a hit
+    row every bit flips w.p. ``burst_rate``.  The marginal per-bit flip
+    rate is ``severity * burst_rate``, but the damage is concentrated:
+    bits in one row fail together, which is exactly the correlation
+    structure iid sweeps cannot probe.
+    """
+
+    row_size: int = 128
+    burst_rate: float = 0.5
+
+    name: ClassVar[str] = "burst"
+
+    def __post_init__(self):
+        if self.row_size < 1:
+            raise ValueError("row_size must be >= 1")
+        if not 0.0 <= self.burst_rate <= 1.0:
+            raise ValueError("burst_rate must be in [0, 1]")
+
+    def _row_gate(self, shape, severity, key):
+        n = math.prod(shape)
+        n_rows = -(-n // self.row_size)
+        hit = jax.random.bernoulli(key, severity, (n_rows,))
+        return jnp.repeat(hit, self.row_size)[:n].reshape(shape)
+
+    def _flip_words(self, u, nbits, udtype, severity, key):
+        k_row, k_bits = jax.random.split(key)
+        gate = self._row_gate(u.shape, severity, k_row)
+        flips = packed_flip_mask(k_bits, self.burst_rate, u.shape, nbits,
+                                 udtype)
+        return u ^ jnp.where(gate, flips, udtype(0))
+
+    def corrupt_qtensor(self, q: QTensor, severity, key):
+        udtype, _ = word_dtypes(q.bits)
+        u = self._flip_words(codes_to_words(q), q.bits, udtype, severity,
+                             key)
+        return words_to_codes(u, q)
+
+    def corrupt_f32(self, w: jax.Array, severity, key):
+        u = _f32_words(w)
+        return _words_f32(self._flip_words(u, 32, jnp.uint32, severity, key))
+
+
+@dataclasses.dataclass(frozen=True)
+class StuckAt(FaultModel):
+    """Persistent stuck-at-0 / stuck-at-1 cells.
+
+    Each stored bit is a stuck cell w.p. severity; ``stuck0_frac`` of the
+    stuck cells read 0 regardless of the stored value, the rest read 1
+    (a cell is never stuck both ways — stuck-at-0 wins the overlap, so
+    the two maps are disjoint).  The map is a pure function of (key,
+    severity, shape): every read in one trial sees the SAME stuck cells,
+    and re-applying the model with the same key is idempotent — the
+    persistence property the tests pin.
+    """
+
+    stuck0_frac: float = 0.5
+
+    name: ClassVar[str] = "stuck_at"
+
+    def __post_init__(self):
+        if not 0.0 <= self.stuck0_frac <= 1.0:
+            raise ValueError("stuck0_frac must be in [0, 1]")
+
+    def _stuck_words(self, u, nbits, udtype, severity, key):
+        k0, k1 = jax.random.split(key)
+        p0 = jnp.clip(severity * self.stuck0_frac, 0.0, 1.0)
+        p1 = jnp.clip(severity * (1.0 - self.stuck0_frac), 0.0, 1.0)
+        m0 = packed_flip_mask(k0, p0, u.shape, nbits, udtype)
+        m1 = packed_flip_mask(k1, p1, u.shape, nbits, udtype) & ~m0
+        return (u & ~m0) | m1
+
+    def corrupt_qtensor(self, q: QTensor, severity, key):
+        udtype, _ = word_dtypes(q.bits)
+        u = self._stuck_words(codes_to_words(q), q.bits, udtype, severity,
+                              key)
+        return words_to_codes(u, q)
+
+    def corrupt_f32(self, w: jax.Array, severity, key):
+        u = _f32_words(w)
+        return _words_f32(self._stuck_words(u, 32, jnp.uint32, severity,
+                                            key))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftFlip(FaultModel):
+    """Read-disturb drift: damage grows with a traced read count.
+
+    Each read flips each stored bit independently w.p. ``per_read_p``
+    (conductance drift / read disturb accumulating over repeated reads);
+    **severity is the read count** and may be traced, so a sweep's
+    severity grid is a grid of read counts.  The cumulative flip parity
+    after r reads has the closed form
+
+        p_eff(r) = (1 - (1 - 2 * per_read_p)^r) / 2
+
+    which is 0 at r = 0, monotone in r, and saturates at 1/2 (a fully
+    scrambled cell) — the masks themselves are a single packed draw at
+    p_eff, so the sweep stays O(|codes|) however large the read count.
+    """
+
+    per_read_p: float = 0.002
+
+    name: ClassVar[str] = "drift"
+
+    def __post_init__(self):
+        if not 0.0 <= self.per_read_p < 0.5:
+            raise ValueError("per_read_p must be in [0, 0.5) — at 0.5 a "
+                             "single read already scrambles every bit")
+
+    def p_eff(self, reads):
+        """Cumulative flip probability after ``reads`` reads (traceable).
+
+        >>> DriftFlip(per_read_p=0.01).p_eff(0.0)
+        Array(0., dtype=float32)
+        """
+        base = jnp.float32(1.0 - 2.0 * self.per_read_p)
+        return 0.5 * (1.0 - jnp.exp(
+            jnp.asarray(reads, jnp.float32) * jnp.log(base)))
+
+    def corrupt_qtensor(self, q: QTensor, severity, key):
+        return flip_bits_int(q, self.p_eff(severity), key)
+
+    def corrupt_f32(self, w: jax.Array, severity, key):
+        return flip_bits_f32(w, self.p_eff(severity), key)

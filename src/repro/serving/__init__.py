@@ -15,7 +15,9 @@ Module map
                 subqueues (within-group FIFO, bounded cross-model wait of
                 ``n_groups`` cycles), futures with the full lifecycle —
                 pending -> dispatched -> done/failed/cancelled, with
-                ``result(timeout=...)``, ``exception()`` and ``cancel()``.
+                ``result(timeout=...)``, ``exception()`` and ``cancel()``;
+                bounded-depth backpressure (``max_depth`` ->
+                ``QueueFullError`` + a ``rejected`` counter).
   buckets.py    ``BucketedPredict``: the shape-bucketed jit cache over
                 ``api.dispatch.predict_fn`` — batches pad up to a fixed
                 bucket ladder so mixed batch sizes compile at most one
@@ -45,12 +47,13 @@ memory.
 
 from repro.serving.buckets import BucketedPredict, bucket_sizes
 from repro.serving.loadgen import LoadResult, closed_loop, open_loop_poisson
-from repro.serving.queue import PredictFuture, PredictRequest, RequestQueue
+from repro.serving.queue import (PredictFuture, PredictRequest,
+                                 QueueFullError, RequestQueue)
 from repro.serving.service import ClassifierService
 
 __all__ = [
     "ClassifierService",
     "BucketedPredict", "bucket_sizes",
-    "RequestQueue", "PredictRequest", "PredictFuture",
+    "RequestQueue", "PredictRequest", "PredictFuture", "QueueFullError",
     "LoadResult", "closed_loop", "open_loop_poisson",
 ]

@@ -24,6 +24,7 @@ import time
 import jax
 import numpy as np
 
+from repro.serving.queue import QueueFullError
 from repro.serving.service import ClassifierService
 
 __all__ = ["LoadResult", "closed_loop", "open_loop_poisson"]
@@ -40,21 +41,23 @@ class LoadResult:
     p99_ms: float
     mean_ms: float
     max_ms: float
+    n_rejected: int = 0         # submits refused by a bounded queue
 
     def to_record(self) -> dict:
         return {k: (round(v, 4) if isinstance(v, float) else v)
                 for k, v in dataclasses.asdict(self).items()}
 
 
-def _summarize(mode: str, latencies_s: np.ndarray, wall_s: float
-               ) -> LoadResult:
+def _summarize(mode: str, latencies_s: np.ndarray, wall_s: float,
+               n_rejected: int = 0) -> LoadResult:
     lat_ms = np.asarray(latencies_s, np.float64) * 1e3
     return LoadResult(
         mode=mode, n_requests=int(lat_ms.size), wall_s=float(wall_s),
         rps=float(lat_ms.size / max(wall_s, 1e-9)),
         p50_ms=float(np.percentile(lat_ms, 50)),
         p99_ms=float(np.percentile(lat_ms, 99)),
-        mean_ms=float(lat_ms.mean()), max_ms=float(lat_ms.max()))
+        mean_ms=float(lat_ms.mean()), max_ms=float(lat_ms.max()),
+        n_rejected=int(n_rejected))
 
 
 def closed_loop(service: ClassifierService, model_name: str, xs,
@@ -82,7 +85,13 @@ def open_loop_poisson(service: ClassifierService, model_name: str, xs,
                       *, rate_rps: float, n_requests: int, seed: int = 0,
                       encoded: bool = False) -> LoadResult:
     """Open-loop mode: Poisson arrivals at ``rate_rps``, latency measured
-    against the *scheduled* arrival time (queueing under overload counts)."""
+    against the *scheduled* arrival time (queueing under overload counts).
+
+    With a bounded service queue (``ClassifierService(max_depth=...)``), a
+    scheduled arrival that finds the queue full is REJECTED — counted in
+    ``LoadResult.n_rejected``, not retried — because an open-loop source
+    does not slow down for the server; shed load is the honest overload
+    signal."""
     if rate_rps <= 0:
         raise ValueError("rate_rps must be > 0")
     xs = np.asarray(xs)
@@ -90,12 +99,16 @@ def open_loop_poisson(service: ClassifierService, model_name: str, xs,
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
     t_start = service.now()
     completions: dict[int, float] = {}
+    n_rejected = 0
     i = 0
     while i < n_requests or len(service.queue):
         now = service.now() - t_start
         while i < n_requests and arrivals[i] <= now:
-            service.submit(model_name, xs[i % len(xs)], encoded=encoded,
-                           t_arrival=t_start + arrivals[i])
+            try:
+                service.submit(model_name, xs[i % len(xs)], encoded=encoded,
+                               t_arrival=t_start + arrivals[i])
+            except QueueFullError:
+                n_rejected += 1
             i += 1
         batch = service.step()
         if batch:
@@ -112,4 +125,4 @@ def open_loop_poisson(service: ClassifierService, model_name: str, xs,
             time.sleep(max(min(arrivals[i] - now, 1e-3), 0.0))
     wall = service.now() - t_start
     lat = np.asarray([completions[uid] for uid in sorted(completions)])
-    return _summarize("open_loop_poisson", lat, wall)
+    return _summarize("open_loop_poisson", lat, wall, n_rejected)

@@ -49,7 +49,20 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-__all__ = ["PredictRequest", "PredictFuture", "RequestQueue", "CancelledError"]
+__all__ = ["PredictRequest", "PredictFuture", "RequestQueue",
+           "QueueFullError", "CancelledError"]
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``RequestQueue.push`` (and ``ClassifierService.submit``)
+    when the queue already holds ``max_depth`` requests.
+
+    Bounded-queue backpressure: under sustained overload an unbounded queue
+    converts overload into unbounded memory growth and unbounded latency;
+    a bounded queue converts it into explicit, countable rejections the
+    caller can retry, shed, or surface.  The rejection is counted in
+    ``RequestQueue.rejected`` / ``ClassifierService.stats()["rejected"]``.
+    """
 
 
 class PredictFuture:
@@ -206,9 +219,18 @@ class RequestQueue:
 
     ``max_group_wait_cycles`` records the worst head-of-group wait observed
     (in admit cycles) — the serve bench's fairness stat.
+
+    ``max_depth`` bounds the total queued requests across all groups:
+    a ``push`` past the bound raises ``QueueFullError`` and increments
+    ``rejected`` (backpressure — overload becomes explicit rejections the
+    caller can retry or shed, not unbounded memory + latency).  The default
+    ``None`` keeps the historical unbounded behaviour.
     """
 
-    def __init__(self):
+    def __init__(self, max_depth: Optional[int] = None):
+        if max_depth is not None and int(max_depth) < 1:
+            raise ValueError("max_depth must be >= 1 (or None for unbounded)")
+        self.max_depth = None if max_depth is None else int(max_depth)
         self._lock = threading.Lock()
         self._groups: dict[tuple, collections.deque] = {}   # insertion order
         self._ring: collections.deque[tuple] = collections.deque()
@@ -216,6 +238,7 @@ class RequestQueue:
         self._uids = itertools.count()
         self.admitted = 0
         self.cycles = 0
+        self.rejected = 0
         self.max_group_wait_cycles = 0
 
     def __len__(self) -> int:
@@ -238,6 +261,14 @@ class RequestQueue:
 
     def push(self, req: PredictRequest) -> PredictFuture:
         with self._lock:
+            if self.max_depth is not None and \
+                    sum(len(q) for q in self._groups.values()) \
+                    >= self.max_depth:
+                self.rejected += 1
+                raise QueueFullError(
+                    f"request queue full ({self.max_depth} queued) — the "
+                    f"service is not draining as fast as requests arrive; "
+                    f"retry later or shed load")
             group = req.group
             sub = self._groups.get(group)
             if sub is None:

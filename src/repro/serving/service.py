@@ -63,11 +63,14 @@ class ClassifierService:
     """
 
     def __init__(self, models: Optional[dict] = None, *,
-                 max_batch: int = 64, buckets: Optional[Sequence[int]] = None):
+                 max_batch: int = 64, buckets: Optional[Sequence[int]] = None,
+                 max_depth: Optional[int] = None):
         self.max_batch = int(max_batch)
         self.bucket_cache = BucketedPredict(buckets=buckets,
                                             max_batch=self.max_batch)
-        self.queue = RequestQueue()
+        # max_depth bounds the queue: submit past it raises QueueFullError
+        # (counted in stats()["rejected"]) instead of growing without bound
+        self.queue = RequestQueue(max_depth=max_depth)
         self._models: dict[str, HDModel] = {}
         self._t0 = time.perf_counter()
         self._cycle_lock = threading.Lock()   # one cycle at a time
@@ -167,7 +170,11 @@ class ClassifierService:
         a service cycle) and int/f64 submissions reuse the f32 executables
         ``warmup()`` compiled instead of minting hidden per-dtype ones.
         ``t_arrival`` (service-clock seconds) lets open-loop load
-        generators stamp the scheduled arrival."""
+        generators stamp the scheduled arrival.
+
+        With a bounded queue (``max_depth=...``) a submit past the bound
+        raises ``QueueFullError`` — backpressure the caller handles —
+        and is counted in ``stats()["rejected"]``."""
         model = self.model(model_name)              # fail fast on bad name
         x = np.asarray(x, np.float32)               # one dtype, one executable
         want = model.enc["proj"].shape[1 if encoded else 0]
@@ -285,6 +292,8 @@ class ClassifierService:
             "admitted": self.queue.admitted,
             "cycles": self.queue.cycles,
             "queued": len(self.queue),
+            "rejected": self.queue.rejected,
+            "max_depth": self.queue.max_depth,
             "errors": self.errors,
             "max_group_wait_cycles": self.queue.max_group_wait_cycles,
             "serving": self.serving(),

@@ -1,6 +1,9 @@
 """Break-point analyzer unit tests."""
 
-from benchmarks.breakpoints import breakpoints, parse_fig3, ratios
+import pytest
+
+from benchmarks.breakpoints import (breakpoints, interpolate_breakpoint,
+                                    parse_fig3, ratios)
 
 
 def _rows():
@@ -15,22 +18,51 @@ def _rows():
     return lines
 
 
+# where each straddling segment crosses target = clean - 0.10
+_LOGHD_PSTAR = 0.3 + (0.82 - 0.80) / (0.82 - 0.3) * 0.1      # ~0.30385
+_SPARSE_PSTAR = 0.1 + (0.90 - 0.82) / (0.90 - 0.6) * 0.1     # ~0.12667
+
+
 def test_parse_and_breakpoints():
     rows = parse_fig3(_rows())
     assert len(rows) == 10
     bps = breakpoints(rows, drop=0.10)
-    assert bps[("isolet", 0.2, 1, "hv", "loghd_k2")] == (0.9, 0.3)
-    assert bps[("isolet", 0.2, 1, "hv", "sparsehd")] == (0.92, 0.1)
+    clean, pstar = bps[("isolet", 0.2, 1, "hv", "loghd_k2")]
+    assert clean == 0.9 and pstar == pytest.approx(_LOGHD_PSTAR)
+    clean, pstar = bps[("isolet", 0.2, 1, "hv", "sparsehd")]
+    assert clean == 0.92 and pstar == pytest.approx(_SPARSE_PSTAR)
 
 
 def test_ratio_table():
     bps = breakpoints(parse_fig3(_rows()), drop=0.10)
     table = ratios(bps)
-    assert table == [("isolet", 0.2, 1, "hv", 0.3, 0.1, 3.0)]
+    assert len(table) == 1
+    ds, budget, bits, scope, log, sp, ratio = table[0]
+    assert (ds, budget, bits, scope) == ("isolet", 0.2, 1, "hv")
+    assert log == pytest.approx(_LOGHD_PSTAR)
+    assert sp == pytest.approx(_SPARSE_PSTAR)
+    assert ratio == round(_LOGHD_PSTAR / _SPARSE_PSTAR, 2)
+
+
+def test_interpolation_between_straddling_grid_points():
+    """p* sits where the straight line between the last passing and first
+    failing grid points crosses the target — strictly between them, exact
+    at the endpoint when the grid point hits the target exactly."""
+    ps = [0.0, 0.1, 0.2]
+    assert interpolate_breakpoint(ps, [0.9, 0.85, 0.75], 0.80) == \
+        pytest.approx(0.15)            # midpoint: 0.85 -> 0.75 crosses at 0.8
+    assert interpolate_breakpoint(ps, [0.9, 0.80, 0.5], 0.80) == \
+        pytest.approx(0.1)             # exactly-at-target point still passes
+    # never fails -> last grid p; single-point curve -> its own p
+    assert interpolate_breakpoint(ps, [0.9, 0.9, 0.9], 0.80) == 0.2
+    assert interpolate_breakpoint([0.0], [0.9], 0.80) == 0.0
 
 
 def test_non_monotone_curve_stops_at_first_failure():
     lines = [f"ds,0.4,8,all,loghd_k2,{p},{a}" for p, a in
              [(0.0, 0.9), (0.1, 0.5), (0.2, 0.9)]]  # recovery ignored
     bps = breakpoints(parse_fig3(lines))
-    assert bps[("ds", 0.4, 8, "all", "loghd_k2")][1] == 0.0
+    # interpolated into the FIRST failing segment; the p=0.2 bounce-back
+    # never resurrects the curve
+    assert bps[("ds", 0.4, 8, "all", "loghd_k2")][1] == \
+        pytest.approx((0.9 - 0.8) / (0.9 - 0.5) * 0.1)

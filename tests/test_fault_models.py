@@ -1,0 +1,332 @@
+"""Fault-model zoo tests: the registry surface, exact iid backward
+compatibility, per-model marginal-rate chi-squared checks (asymmetric's two
+rates measured separately, burst's within-row vs cross-row correlation,
+stuck-at persistence/idempotence, drift's closed-form read-count law), the
+all-models-compile-through-``sweep_under_flips`` contract, and the
+zero-retrace guarantee: one compiled executable per (model family, fault
+model) across an entire severity grid."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import make_classifier
+from repro.core import evaluate as ev
+from repro.core.faults import corrupt_model, fault_skip_set
+from repro.core.quantize import QTensor, quantize
+from repro.faults import (AsymmetricFlip, BurstFlip, DriftFlip, FaultModel,
+                          IIDFlip, StuckAt, available_fault_models,
+                          get_fault_model_factory, make_fault_model)
+from repro.hdc.encoders import encode_batched
+
+C, F, D = 5, 12, 256
+
+
+@functools.lru_cache(maxsize=4)
+def _fitted(name="loghd"):
+    key = jax.random.PRNGKey(0)
+    dirs = jax.random.normal(key, (C, F))
+    y = jnp.arange(C * 24) % C
+    x = dirs[y] * 2.0 + jax.random.normal(key, (len(y), F)) * 0.3
+    kw = (dict(k=2, extra_bundles=1, refine_epochs=2) if name == "loghd"
+          else {})
+    clf = make_classifier(name, n_classes=C, in_features=F, dim=D,
+                          **kw).fit(x, y)
+    h = encode_batched(clf.model.enc, x, clf.enc_cfg.kind)
+    return clf, h, y
+
+
+def _codes(bits=4, shape=(128, 512), seed=9):
+    w = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return quantize(w, bits)
+
+
+def _bitplanes(codes, bits):
+    """(n_bits_set per plane) view of int codes as unsigned b-bit words."""
+    u = np.asarray(codes, np.int64) & ((1 << bits) - 1)
+    return u
+
+
+# --------------------------------------------------------------- registry --
+
+def test_registry_surface():
+    assert available_fault_models() == ("asymmetric", "burst", "drift",
+                                        "iid", "stuck_at")
+    m = make_fault_model("burst", row_size=32, burst_rate=0.25)
+    assert isinstance(m, BurstFlip)
+    assert m.row_size == 32 and m.burst_rate == 0.25
+    assert isinstance(make_fault_model("iid"), IIDFlip)
+    with pytest.raises(KeyError, match="asymmetric"):
+        make_fault_model("nope")
+    assert get_fault_model_factory("drift") is DriftFlip
+
+
+def test_models_are_hashable_jit_cache_keys():
+    """Frozen dataclasses: equal parameters are one cache key, different
+    parameters are different keys."""
+    assert make_fault_model("asymmetric") == AsymmetricFlip()
+    assert hash(StuckAt(stuck0_frac=0.3)) == hash(StuckAt(stuck0_frac=0.3))
+    assert BurstFlip(row_size=64) != BurstFlip(row_size=128)
+    assert isinstance(IIDFlip(), FaultModel)
+
+
+def test_parameter_validation():
+    with pytest.raises(ValueError):
+        AsymmetricFlip(p01_scale=-0.1)
+    with pytest.raises(ValueError):
+        BurstFlip(row_size=0)
+    with pytest.raises(ValueError):
+        BurstFlip(burst_rate=1.5)
+    with pytest.raises(ValueError):
+        StuckAt(stuck0_frac=2.0)
+    with pytest.raises(ValueError):
+        DriftFlip(per_read_p=0.5)
+
+
+# ------------------------------------------------------ iid exact parity ---
+
+def test_iid_corrupt_exactly_matches_legacy_corrupt_model():
+    """``IIDFlip.corrupt`` must reproduce ``core.faults.corrupt_model`` bit
+    for bit on the same key — same tree walk, same per-leaf key split, same
+    masks."""
+    clf, _, _ = _fitted()
+    qd = {k: v for k, v in clf.model.quantized(3).to_dict().items()
+          if k != "enc"}
+    key = jax.random.PRNGKey(77)
+    for scope in ("all", "hv"):
+        legacy = corrupt_model(dict(qd), 0.13, key, scope)
+        zoo = IIDFlip().corrupt(dict(qd), 0.13, key,
+                                skip=fault_skip_set(scope))
+        assert set(legacy) == set(zoo)
+        for name in legacy:
+            a, b = legacy[name], zoo[name]
+            if isinstance(a, QTensor):
+                np.testing.assert_array_equal(np.asarray(a.codes),
+                                              np.asarray(b.codes))
+            else:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_iid_sweep_exactly_matches_default_path():
+    """``fault_model="iid"`` and the legacy ``fault_model=None`` sweep draw
+    the same masks key-for-key: identical accuracy matrices."""
+    clf, h, y = _fitted()
+    key = jax.random.PRNGKey(5)
+    grid = [0.0, 0.05, 0.2]
+    legacy = ev.sweep_under_flips(clf.model, 4, grid, h, y, key, n_trials=3)
+    zoo = ev.sweep_under_flips(clf.model, 4, grid, h, y, key, n_trials=3,
+                               fault_model="iid")
+    np.testing.assert_array_equal(legacy, zoo)
+
+
+# -------------------------------------------------- marginal rates (chi2) --
+
+def _chi2_binom(k, n, p):
+    """One Binomial(n, p) cell's chi-squared contribution."""
+    return (k - n * p) ** 2 / (n * p * (1 - p) + 1e-12)
+
+
+def test_asymmetric_rates_chi_squared():
+    """0->1 flips among stored-0 bits at severity*p01_scale and 1->0 flips
+    among stored-1 bits at severity*p10_scale — measured SEPARATELY per
+    plane, chi-squared against the two binomials."""
+    bits, sev = 4, 0.2
+    fm = AsymmetricFlip(p01_scale=0.25, p10_scale=1.0)
+    q = _codes(bits)
+    fq = fm.corrupt_qtensor(q, sev, jax.random.PRNGKey(3))
+    u0 = _bitplanes(q.codes, bits)
+    u1 = _bitplanes(fq.codes, bits)
+    p01, p10 = sev * fm.p01_scale, sev * fm.p10_scale
+    chi2_01 = chi2_10 = 0.0
+    for b in range(bits):
+        stored = (u0 >> b) & 1
+        read = (u1 >> b) & 1
+        n0, n1 = int((stored == 0).sum()), int((stored == 1).sum())
+        k01 = int(((stored == 0) & (read == 1)).sum())
+        k10 = int(((stored == 1) & (read == 0)).sum())
+        chi2_01 += _chi2_binom(k01, n0, p01)
+        chi2_10 += _chi2_binom(k10, n1, p10)
+    # each ~ ChiSq(df=4); P[> 23.5] ~ 1e-4
+    assert chi2_01 < 23.5, chi2_01
+    assert chi2_10 < 23.5, chi2_10
+    # and the asymmetry is real: far more 1->0 than 0->1 flips overall
+    tot01 = int(((u0 ^ u1) & ~u0 & ((1 << bits) - 1) > 0).sum())
+    tot10 = int(((u0 ^ u1) & u0 > 0).sum())
+    assert tot10 > 2 * tot01, (tot01, tot10)
+
+
+def test_burst_marginal_and_row_correlation():
+    """Marginal per-bit rate = severity * burst_rate (chi-squared per
+    plane); correlation: hit rows carry ~burst_rate damage, unhit rows are
+    untouched — the per-row damage distribution is bimodal, nothing like
+    an iid spread."""
+    bits, sev = 4, 0.3
+    row = 128
+    fm = BurstFlip(row_size=row, burst_rate=0.5)
+    q = _codes(bits, shape=(256, 512))
+    fq = fm.corrupt_qtensor(q, sev, jax.random.PRNGKey(8))
+    x = _bitplanes(q.codes, bits) ^ _bitplanes(fq.codes, bits)
+    n = x.size
+    marginal = sev * fm.burst_rate
+    for b in range(bits):
+        rate = int(((x >> b) & 1).sum()) / n
+        # the row gating inflates the plane-rate variance far past the
+        # binomial (one gate draw covers a whole row), so the window is set
+        # from the row-level variance: ~4.2 sigma of the gated rate
+        assert abs(rate - marginal) < 0.03, (b, rate)
+    # row structure: flatten in storage order, cut into rows of `row` words
+    flat = x.reshape(-1)
+    nrows = flat.size // row
+    per_row = (np.unpackbits(
+        flat[:nrows * row].astype(np.uint16).view(np.uint8))
+        .reshape(nrows, -1).sum(axis=1))
+    hit = per_row > 0
+    # hit fraction ~ severity (4-sigma window)
+    se = np.sqrt(sev * (1 - sev) / nrows)
+    assert abs(hit.mean() - sev) < 4 * se + 1e-9, hit.mean()
+    # within hit rows the damage is ~burst_rate of the row's bits; unhit
+    # rows are exactly zero — cross-row variance is overdispersed vs iid
+    bits_per_row = row * bits
+    assert per_row[hit].mean() > 0.8 * fm.burst_rate * bits_per_row
+    iid_var = flat.size * bits / nrows * marginal * (1 - marginal)
+    assert per_row.var() > 10 * iid_var, (per_row.var(), iid_var)
+
+
+def test_stuck_at_marginal_persistence_idempotence():
+    bits, sev = 4, 0.2
+    fm = StuckAt(stuck0_frac=0.5)
+    q = _codes(bits)
+    key = jax.random.PRNGKey(13)
+    fq = fm.corrupt_qtensor(q, sev, key)
+    u0, u1 = _bitplanes(q.codes, bits), _bitplanes(fq.codes, bits)
+    # marginal: P(stuck at 0) = sev*frac; P(stuck at 1) =
+    # sev*(1-frac)*(1 - sev*frac) because stuck-0 wins the overlap (the
+    # maps are disjoint).  A stuck-at-v cell only CHANGES a read when the
+    # stored bit is ~v, so the expected flip count per plane depends on
+    # that plane's stored 0/1 split — chi-squared against the exact
+    # two-binomial expectation.
+    p0 = sev * fm.stuck0_frac
+    p1 = sev * (1.0 - fm.stuck0_frac) * (1.0 - p0)
+    chi2 = 0.0
+    for b in range(bits):
+        stored = (u0 >> b) & 1
+        flipped = ((u0 ^ u1) >> b) & 1
+        n1, n0 = int(stored.sum()), int((1 - stored).sum())
+        expect = n1 * p0 + n0 * p1
+        var = n1 * p0 * (1 - p0) + n0 * p1 * (1 - p1)
+        chi2 += (int(flipped.sum()) - expect) ** 2 / (var + 1e-12)
+    assert chi2 < 23.5, chi2
+    # persistence: the map is a pure function of the key — corrupting the
+    # SAME stored data again reads back identically
+    fq2 = fm.corrupt_qtensor(q, sev, key)
+    np.testing.assert_array_equal(np.asarray(fq.codes), np.asarray(fq2.codes))
+    # idempotence: stuck cells are already stuck — re-applying to the
+    # corrupted read changes nothing (disjoint stuck-0/stuck-1 maps)
+    fq3 = fm.corrupt_qtensor(fq, sev, key)
+    np.testing.assert_array_equal(np.asarray(fq.codes), np.asarray(fq3.codes))
+
+
+def test_drift_identity_closed_form_and_monotonicity():
+    bits = 4
+    fm = DriftFlip(per_read_p=0.002)
+    q = _codes(bits)
+    key = jax.random.PRNGKey(21)
+    # reads = 0 is the identity
+    f0 = fm.corrupt_qtensor(q, 0.0, key)
+    np.testing.assert_array_equal(np.asarray(q.codes), np.asarray(f0.codes))
+    # closed form: p_eff(r) = (1 - (1-2p)^r) / 2, saturating at 1/2
+    for r in (1, 100, 1000):
+        expect = (1.0 - (1.0 - 2 * fm.per_read_p) ** r) / 2.0
+        assert float(fm.p_eff(float(r))) == pytest.approx(expect, rel=1e-4)
+    assert float(fm.p_eff(1e6)) == pytest.approx(0.5)
+    # measured rate at r=200 matches p_eff(200), chi-squared per plane
+    r = 200.0
+    fq = fm.corrupt_qtensor(q, r, key)
+    x = _bitplanes(q.codes, bits) ^ _bitplanes(fq.codes, bits)
+    p = float(fm.p_eff(r))
+    chi2 = sum(_chi2_binom(int(((x >> b) & 1).sum()), x.size, p)
+               for b in range(bits))
+    assert chi2 < 23.5, chi2
+    # monotone damage in read count (same key: common random numbers)
+    rates = [float(np.mean(np.unpackbits(
+        (_bitplanes(q.codes, bits)
+         ^ _bitplanes(fm.corrupt_qtensor(q, rr, key).codes, bits))
+        .astype(np.uint8))))
+        for rr in (0.0, 50.0, 500.0, 5000.0)]
+    assert rates == sorted(rates), rates
+
+
+def test_severity_zero_is_identity_for_every_model():
+    q = _codes(4)
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 64))
+    key = jax.random.PRNGKey(1)
+    for name in available_fault_models():
+        fm = make_fault_model(name)
+        fq = fm.corrupt_qtensor(q, 0.0, key)
+        np.testing.assert_array_equal(np.asarray(q.codes),
+                                      np.asarray(fq.codes), err_msg=name)
+        fw = fm.corrupt_f32(w, 0.0, key)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(fw),
+                                      err_msg=name)
+
+
+# ------------------------------------- sweep integration + zero retrace ----
+
+@pytest.mark.parametrize("name", ["iid", "asymmetric", "burst", "stuck_at",
+                                  "drift"])
+def test_every_model_compiles_through_sweep(name):
+    clf, h, y = _fitted()
+    grid = [0.0, 100.0] if name == "drift" else [0.0, 0.1]
+    accs = ev.sweep_under_flips(clf.model, 4, grid, h, y,
+                                jax.random.PRNGKey(3), n_trials=2,
+                                fault_model=name)
+    assert accs.shape == (2, 2)
+    assert np.all(accs >= 0) and np.all(accs <= 1)
+    # severity 0 equals the clean row of the default path
+    legacy = ev.sweep_under_flips(clf.model, 4, [0.0], h, y,
+                                  jax.random.PRNGKey(3), n_trials=2)
+    np.testing.assert_array_equal(accs[0], legacy[0])
+
+
+def test_zero_retrace_across_severity_grid():
+    """One compiled executable per (family, fault model): a full severity
+    grid plus repeat calls with a different grid reuse the cache — the
+    in-graph-severity contract."""
+    clf, h, y = _fitted()
+    ev.clear_caches()
+    key = jax.random.PRNGKey(4)
+    for name in available_fault_models():
+        grid = [0.0, 10.0, 200.0] if name == "drift" else [0.0, 0.05, 0.2]
+        ev.sweep_under_flips(clf.model, 4, grid, h, y, key, n_trials=2,
+                             fault_model=name)
+    entries = {k: fn._cache_size() for k, fn in ev._SWEEP_JIT_CACHE.items()}
+    assert len(entries) == len(available_fault_models())
+    assert all(n == 1 for n in entries.values()), entries
+    # a second pass — different severities, same shapes — adds nothing
+    for name in available_fault_models():
+        grid = [5.0, 50.0, 99.0] if name == "drift" else [0.01, 0.11, 0.31]
+        ev.sweep_under_flips(clf.model, 4, grid, h, y, key, n_trials=2,
+                             fault_model=name)
+    after = {k: fn._cache_size() for k, fn in ev._SWEEP_JIT_CACHE.items()}
+    assert after == entries, (entries, after)
+
+
+def test_parameterized_instances_are_distinct_cache_entries():
+    """Different static parameters are different executables; a string name
+    and its default instance share one."""
+    clf, h, y = _fitted()
+    ev.clear_caches()
+    key = jax.random.PRNGKey(6)
+    kw = dict(n_trials=2, fault_model=BurstFlip(row_size=64))
+    ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key, **kw)
+    ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key, n_trials=2,
+                         fault_model=BurstFlip(row_size=32))
+    ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key, n_trials=2,
+                         fault_model="burst")      # default instance
+    ev.sweep_under_flips(clf.model, 4, [0.0, 0.1], h, y, key, n_trials=2,
+                         fault_model=BurstFlip())  # same as "burst"
+    models = [k[3] for k in ev._SWEEP_JIT_CACHE]
+    assert sorted(m.row_size for m in models) == [32, 64, 128]

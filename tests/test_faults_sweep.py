@@ -47,7 +47,8 @@ def _fitted(name="loghd", **kw):
 # ------------------------------------------------------------ packed mask --
 
 @pytest.mark.parametrize("bits,dtype", [(1, jnp.uint8), (4, jnp.uint8),
-                                        (8, jnp.uint8), (32, jnp.uint32)])
+                                        (8, jnp.uint8), (12, jnp.uint16),
+                                        (16, jnp.uint16), (32, jnp.uint32)])
 def test_packed_mask_matches_per_bit_expansion(bits, dtype):
     """The packed generator must equal the historical trailing-axis
     expansion computed from the same per-plane keys, bit for bit."""
@@ -72,19 +73,48 @@ def test_packed_mask_p_endpoints():
 
 
 def test_wide_bit_widths_raise_instead_of_truncating():
-    """bits > 8 used to silently truncate through astype(uint8) — a future
-    16-bit QTensor would have corrupted the wrong bits.  Pinned: both entry
-    points raise a clear ValueError."""
+    """bits > 16 has no integer word type here — a wider QTensor would have
+    corrupted the wrong bits through silent truncation.  Pinned: both entry
+    points raise a clear ValueError past their word width."""
     key = jax.random.PRNGKey(0)
-    q16 = QTensor(jnp.zeros((4, 4), jnp.int8), jnp.float32(1.0), 16)
+    q17 = QTensor(jnp.zeros((4, 4), jnp.int32), jnp.float32(1.0), 17)
     with pytest.raises(ValueError, match="16-bit"):
-        flip_bits_int(q16, 0.1, key)
+        flip_bits_int(q17, 0.1, key)
     with pytest.raises(ValueError, match="does not fit"):
         packed_flip_mask(key, 0.1, (4, 4), 16, jnp.uint8)
     with pytest.raises(ValueError, match="does not fit"):
         packed_flip_mask(key, 0.1, (4, 4), 33, jnp.uint32)
     # exactly-at-width stays legal (the f32 path packs 32 planes in uint32)
     assert packed_flip_mask(key, 0.0, (4, 4), 32, jnp.uint32).shape == (4, 4)
+
+
+@pytest.mark.parametrize("bits", [9, 12, 16])
+def test_flip_bits_int_uint16_path(bits):
+    """8 < bits <= 16 flips through uint16 words: parity with a per-plane
+    expanded reference (XOR + sign-extend from bit ``bits``-1) and exact
+    identity at p=0."""
+    from repro.core.faults import bit_plane_keys, word_dtypes
+    key = jax.random.PRNGKey(31)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    codes = jax.random.randint(jax.random.PRNGKey(30), (37, 21), lo, hi + 1,
+                               jnp.int16)
+    q = QTensor(codes, jnp.float32(0.5), bits)
+    np.testing.assert_array_equal(
+        np.asarray(flip_bits_int(q, 0.0, key).codes), np.asarray(codes))
+
+    p = 0.2
+    fq = flip_bits_int(q, p, key)
+    udtype, sdtype = word_dtypes(bits)
+    assert fq.codes.dtype == jnp.int16 and sdtype == jnp.int16
+    # expanded reference from the same per-plane key chain
+    keys = bit_plane_keys(key, bits)
+    u = np.asarray(codes, np.int64) & ((1 << bits) - 1)
+    for i in range(bits):
+        plane = np.asarray(jax.random.bernoulli(keys[i], p, codes.shape))
+        u = u ^ (plane.astype(np.int64) << i)
+    signed = np.where(u >= (1 << (bits - 1)), u - (1 << bits), u)
+    np.testing.assert_array_equal(np.asarray(fq.codes, np.int64), signed)
+    assert fq.bits == bits and float(fq.scale) == float(q.scale)
 
 
 def test_flip_bits_identity_and_traced_p():

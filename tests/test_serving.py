@@ -20,8 +20,8 @@ import pytest
 from repro.api import dispatch, make_classifier, predict_encoded
 from repro.hdc.encoders import encode_batched
 from repro.serving import (BucketedPredict, ClassifierService, PredictFuture,
-                           PredictRequest, RequestQueue, bucket_sizes,
-                           closed_loop, open_loop_poisson)
+                           PredictRequest, QueueFullError, RequestQueue,
+                           bucket_sizes, closed_loop, open_loop_poisson)
 from repro.serving.service import _encode_jit
 
 C, F, D = 5, 12, 256
@@ -477,6 +477,41 @@ def test_service_validation():
         svc.register("bad", {"protos": np.zeros((2, 3))})
 
 
+def test_bounded_queue_backpressure():
+    """A queue with ``max_depth`` rejects the (max_depth+1)-th push with
+    ``QueueFullError``, counts it, and accepts again once a cycle drains
+    slots; unbounded queues never reject."""
+    q = RequestQueue(max_depth=3)
+    futs = [q.push(_req(q, "m")) for _ in range(3)]
+    with pytest.raises(QueueFullError):
+        q.push(_req(q, "m"))
+    with pytest.raises(QueueFullError):
+        q.push(_req(q, "other"))             # depth is global, not per group
+    assert q.rejected == 2 and len(q) == 3
+    assert q.admit(2) and len(q) == 1        # drained two slots
+    q.push(_req(q, "m"))                     # accepted again
+    assert len(q) == 2 and q.rejected == 2
+    for f in futs:
+        assert not f.cancelled()             # accepted futures untouched
+    with pytest.raises(ValueError):
+        RequestQueue(max_depth=0)
+
+
+def test_service_backpressure_counted_in_stats():
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=4, max_depth=2)
+    svc.submit("m", x[0]); svc.submit("m", x[1])
+    with pytest.raises(QueueFullError):
+        svc.submit("m", x[2])
+    st = svc.stats()
+    assert st["rejected"] == 1 and st["max_depth"] == 2 and st["queued"] == 2
+    svc.run_until_drained()
+    fut = svc.submit("m", x[2])              # space again after the drain
+    svc.run_until_drained()
+    assert fut.result() == int(clf.predict(x[2:3])[0])
+
+
 # ---------------------------------------------------------------- loadgen --
 
 def test_closed_loop_stats_sane():
@@ -496,5 +531,23 @@ def test_open_loop_poisson_completes_all_requests():
     res = open_loop_poisson(svc, "m", np.asarray(x[:16]), rate_rps=2000.0,
                             n_requests=25, seed=1)
     assert res.n_requests == 25
+    assert res.n_rejected == 0               # unbounded queue: no shedding
     assert res.p50_ms <= res.p99_ms
     assert len(svc.queue) == 0
+
+
+def test_open_loop_counts_rejections_under_bounded_queue():
+    """Open-loop + bounded queue: arrivals that find the queue full are shed
+    (counted in ``n_rejected``), every accepted request still completes, and
+    accepted + rejected accounts for every scheduled arrival."""
+    clf = _fitted("conventional")
+    x, _ = _data()
+    svc = ClassifierService({"m": clf.model}, max_batch=1, max_depth=1)
+    n = 30
+    res = open_loop_poisson(svc, "m", np.asarray(x[:8]), rate_rps=50_000.0,
+                            n_requests=n, seed=3)
+    assert res.n_requests + res.n_rejected == n
+    assert res.n_rejected > 0                # this rate must overrun depth 1
+    assert res.n_rejected == svc.stats()["rejected"]
+    assert len(svc.queue) == 0
+    assert "n_rejected" in res.to_record()
