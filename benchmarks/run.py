@@ -17,6 +17,10 @@
                        one-request-per-call (conventional vs LogHD at
                        matched memory); appends p50/p99 latency and
                        requests/sec to BENCH_serve.json
+  fit_bench          — fused single-jit training engine vs the frozen
+                       eager epoch loops per method; appends to
+                       BENCH_fit.json, gated >=5x with accuracy z-tests
+                       and zero post-warmup retraces
 
 `python -m benchmarks.run` (or `--quick`) runs the QUICK suite (the 1-core
 CPU container cannot finish the full grids in reasonable time); `--full`
@@ -43,14 +47,15 @@ def main() -> None:
 
     from benchmarks import (breakpoint_surface, fault_sweep_bench,
                             fig3_bitflip, fig4_dim_quant, fig5_alphabet,
-                            fig6_hybrid, kernels_bench, serve_bench,
-                            table2_efficiency)
+                            fig6_hybrid, fit_bench, kernels_bench,
+                            serve_bench, table2_efficiency)
     suites = {
         "table2": table2_efficiency,
         "kernels": kernels_bench,
         "fault_sweep": fault_sweep_bench,
         "breakpoint_surface": breakpoint_surface,
         "serve": serve_bench,
+        "fit": fit_bench,
         "fig5": fig5_alphabet,
         "fig4": fig4_dim_quant,
         "fig6": fig6_hybrid,

@@ -1,48 +1,118 @@
-"""End-to-end training driver on the runtime loop: a scaled-down LM trained
-for a few hundred steps with checkpoint/restart, straggler watchdog and the
-deterministic token pipeline.
+"""100M-word-scale streaming HD training on the fused data-parallel engine.
 
-Default config is sized for this 1-core CPU container (~8M params, 200
-steps); pass --d-model 768 --layers 12 --steps 300 for a ~100M-param run on
-real hardware.  Kill the process at any point and re-run: it resumes from
-the latest committed checkpoint and reproduces the exact batch sequence.
+Streams synthetic class-conditional shards (fixed class geometry, fresh
+samples per shard) through ``fit_engine.fused_onlinehd_fit_dp``: each shard
+is encoded, sharded over the mesh's data axis, and consumed by the fused
+single-jit fit in ``global-batch``-sized steps with the per-shard prototype
+deltas all-reduced through the int8 error-feedback compressed psum
+(``optim/grad_compress.py``).  Prototypes carry across shards, so the whole
+run is one online pass over ~100M encoded words (shards x examples x D) —
+far more data than a single host batch ever materializes; the old
+hand-rolled LM step loop this example used lives on in
+``repro.runtime.train_loop``.
 
-    PYTHONPATH=src python examples/train_100m.py --steps 40
+Default config is sized for this 1-core CPU container (~100M encoded words
+in a few minutes).  Scale knobs: ``--shards``, ``--shard-size``, ``--dim``.
+``--devices N`` forces N host devices (XLA_FLAGS, set before jax imports)
+so the data-parallel all-reduce path is exercised locally:
+
+    PYTHONPATH=src python examples/train_100m.py --devices 4 --shards 4
 """
 
 import argparse
-import dataclasses
-import logging
+import os
+import time
 
-from repro.configs import get_smoke_config
-from repro.runtime.train_loop import TrainLoopConfig, run_training
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=12)
+    ap.add_argument("--shard-size", type=int, default=4096)
+    ap.add_argument("--dim", type=int, default=2048)
+    ap.add_argument("--dataset", default="isolet")
+    ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--epochs-per-shard", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compress", choices=["int8", "none"], default="int8")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (must be set before jax init)")
+    return ap.parse_args()
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--d-model", type=int, default=256)
-    ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_train100m")
-    args = ap.parse_args()
+    args = _parse_args()
+    if args.devices > 0:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
 
-    logging.basicConfig(level=logging.INFO,
-                        format="%(asctime)s %(name)s %(message)s")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
-    cfg = dataclasses.replace(
-        get_smoke_config("qwen3-1.7b"), vocab=8192, d_model=args.d_model,
-        n_heads=max(4, args.d_model // 64), n_kv_heads=max(2, args.d_model // 128),
-        head_dim=64, d_ff=4 * args.d_model, n_periods=args.layers)
-    n_params = cfg.param_count()
-    print(f"model: {n_params/1e6:.1f}M params "
-          f"(d={cfg.d_model}, L={cfg.n_layers}, V={cfg.vocab})")
+    from repro.api import fit_engine
+    from repro.data.synth import DATASETS, _make_split
+    from repro.hdc.conventional import class_prototypes
+    from repro.hdc.encoders import EncoderConfig, encode_batched, fit_encoder
+    from repro.launch.mesh import make_debug_mesh
 
-    loop = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                           ckpt_every=max(args.steps // 4, 10), log_every=10,
-                           peak_lr=3e-4, warmup_steps=20)
-    out = run_training(cfg, loop=loop, global_batch=8, seq_len=128)
-    print(f"resumed={out['resumed']} first_step={out['first_step']} "
-          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    spec = DATASETS[args.dataset]
+    compress = None if args.compress == "none" else args.compress
+    mesh = make_debug_mesh()
+    n_dev = int(mesh.shape["data"])
+    words = args.shards * args.shard_size * args.dim
+    print(f"streaming {args.shards} shards x {args.shard_size} examples "
+          f"x D={args.dim} = {words/1e6:.0f}M encoded words over "
+          f"{n_dev} device(s), compress={compress}")
+
+    # fixed class geometry shared by every shard (same preamble as
+    # data.synth.load_dataset, one seed for the whole stream)
+    rng = np.random.default_rng(spec.seed)
+    class_dir = rng.standard_normal((spec.n_classes, spec.n_features))
+    class_dir /= np.linalg.norm(class_dir, axis=-1, keepdims=True)
+    mode_off = rng.standard_normal(
+        (spec.n_classes, spec.modes_per_class, spec.n_features))
+    mode_off /= np.linalg.norm(mode_off, axis=-1, keepdims=True)
+    means = (spec.sep * class_dir[:, None, :]
+             + spec.mode_scale * spec.sep * mode_off)
+
+    def shard(i, n):
+        x, y = _make_split(spec, n, np.random.default_rng(1000 + i), means)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    # encoder calibrated on shard 0; prototypes superposed from it, then
+    # refined online across the remaining stream
+    enc_cfg = EncoderConfig(spec.n_features, args.dim, "cos")
+    x0, y0 = shard(0, args.shard_size)
+    enc, h0 = fit_encoder(enc_cfg, x0)
+    protos = class_prototypes(h0, y0, spec.n_classes)
+
+    x_te, y_te = shard(10_000, 2048)              # held-out evaluation shard
+    h_te = encode_batched(enc, x_te, "cos")
+
+    def accuracy(p):
+        return float(jnp.mean(jnp.argmax(h_te @ p.T, axis=-1) == y_te))
+
+    print(f"shard 0 (superposition only): acc {accuracy(protos):.4f}")
+    t0 = time.perf_counter()
+    seen = 0
+    for i in range(args.shards):
+        x, y = (x0, y0) if i == 0 else shard(i, args.shard_size)
+        h = h0 if i == 0 else encode_batched(enc, x, "cos")
+        protos = fit_engine.fused_onlinehd_fit_dp(
+            protos, h, y, lr=args.lr, batch_size=args.global_batch,
+            epochs=args.epochs_per_shard, mesh=mesh, compress=compress)
+        jax.block_until_ready(protos)
+        seen += h.shape[0]
+        if i % 4 == 3 or i == args.shards - 1:
+            dt = time.perf_counter() - t0
+            print(f"shard {i}: {seen} examples "
+                  f"({seen * args.dim / dt / 1e6:.1f}M words/s incl. "
+                  f"encode), acc {accuracy(protos):.4f}")
+    dt = time.perf_counter() - t0
+    print(f"done: {args.shards} shards, {seen} examples, "
+          f"{seen * args.dim / 1e6:.0f}M encoded words in {dt:.1f}s; "
+          f"final acc {accuracy(protos):.4f}")
 
 
 if __name__ == "__main__":

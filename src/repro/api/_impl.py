@@ -11,11 +11,17 @@ stays in ``repro.core`` / ``repro.hdc``.
 All trainers share the keyword protocol of ``MethodSpec.fit``:
 
     fit(cfg, enc_cfg, x, y, *, enc=None, encoded=None,
-        prototypes=None, base=None) -> HDModel
+        prototypes=None, base=None, key=None) -> HDModel
 
 ``enc``/``encoded``/``prototypes``/``base`` let callers share work across
 methods — the paper trains every method from one encoder and one prototype
-set, and the hybrid trainer reuses a fitted LogHD base model.
+set, and the hybrid trainer reuses a fitted LogHD base model.  ``key``
+joins the trainer to the caller's PRNG key chain (today only LogHD's
+refinement shuffle draws randomness; the default stays the config seed).
+
+Epoch loops run on the fused single-jit training engine
+(``repro.api.fit_engine``): the whole refine/retrain phase is one compiled
+executable, key-for-key bit-identical to the historical eager loops.
 """
 
 from __future__ import annotations
@@ -25,17 +31,18 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.fit_engine import fused_onlinehd_fit, fused_refine_bundles
 from repro.api.models import (ConventionalModel, HybridModel, LogHDModel,
                               SparseHDModel)
 from repro.core import codebook as cb
-from repro.core.bundling import build_bundles, refine_bundles
+from repro.core.bundling import build_bundles
 from repro.core.hybrid import HybridConfig
 from repro.core.loghd import LogHDConfig
 from repro.core.profiles import estimate_profiles
 from repro.core.sparsehd import (SparseHDConfig, dimension_saliency,
                                  keep_indices)
 from repro.hdc.conventional import (ConventionalConfig, class_prototypes,
-                                    l2_normalize as _l2n, onlinehd_epoch)
+                                    l2_normalize as _l2n)
 from repro.hdc.encoders import EncoderConfig, encode_batched
 
 __all__ = ["fit_conventional_model", "fit_sparsehd_model",
@@ -58,19 +65,21 @@ def fit_conventional_model(cfg: ConventionalConfig, enc_cfg: EncoderConfig,
                            enc: Optional[dict] = None,
                            encoded: Optional[jax.Array] = None,
                            prototypes: Optional[jax.Array] = None,
-                           base=None) -> ConventionalModel:
+                           base=None, key=None) -> ConventionalModel:
     """Superpose per-class prototypes, optionally OnlineHD-refine them.
 
     With ``prototypes`` + ``enc`` supplied and no refinement requested the
     model is assembled directly (the shared-prototype fast path every
-    benchmark fixture uses)."""
+    benchmark fixture uses).  Refinement runs on the fused single-jit
+    engine — all epochs in one executable."""
     if prototypes is not None and enc is not None and cfg.refine_epochs == 0:
         return ConventionalModel(enc=enc, protos=prototypes,
                                  encoder_kind=enc_cfg.kind)
     enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
     protos = class_prototypes(h, y, cfg.n_classes)
-    for _ in range(cfg.refine_epochs):
-        protos = onlinehd_epoch(protos, h, y, cfg.lr, cfg.batch_size)
+    protos = fused_onlinehd_fit(protos, h, y, lr=cfg.lr,
+                                batch_size=cfg.batch_size,
+                                epochs=cfg.refine_epochs)
     return ConventionalModel(enc=enc, protos=protos, encoder_kind=enc_cfg.kind)
 
 
@@ -79,16 +88,20 @@ def fit_sparsehd_model(cfg: SparseHDConfig, enc_cfg: EncoderConfig,
                        enc: Optional[dict] = None,
                        encoded: Optional[jax.Array] = None,
                        prototypes: Optional[jax.Array] = None,
-                       base=None) -> SparseHDModel:
-    """Prune the least-salient dimensions, then retrain in the kept space."""
+                       base=None, key=None) -> SparseHDModel:
+    """Prune the least-salient dimensions, then retrain in the kept space.
+
+    Retraining runs on the fused single-jit engine — all epochs in one
+    executable."""
     enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
     protos = (class_prototypes(h, y, cfg.n_classes)
               if prototypes is None else prototypes)
     keep = keep_indices(protos, cfg.sparsity, cfg.saliency)
     protos_s = _l2n(protos[:, keep])
     h_s = _l2n(h[:, keep])
-    for _ in range(cfg.retrain_epochs):
-        protos_s = onlinehd_epoch(protos_s, h_s, y, cfg.lr, cfg.batch_size)
+    protos_s = fused_onlinehd_fit(protos_s, h_s, y, lr=cfg.lr,
+                                  batch_size=cfg.batch_size,
+                                  epochs=cfg.retrain_epochs)
     return SparseHDModel(enc=enc, protos=protos_s, keep=keep,
                          encoder_kind=enc_cfg.kind)
 
@@ -97,14 +110,16 @@ def fit_loghd_model(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
                     y: jax.Array, *, enc: Optional[dict] = None,
                     encoded: Optional[jax.Array] = None,
                     prototypes: Optional[jax.Array] = None,
-                    base=None) -> LogHDModel:
+                    base=None, key=None) -> LogHDModel:
     """Train a LogHD model (paper Algorithm 1).
 
     Prototypes -> capacity-aware codebook -> bundle superposition ->
-    Eq. 9 refinement -> activation-profile estimation.  ``sigma_inv``
-    (pooled within-class activation covariance inverse) supports the
-    optional Mahalanobis decode variant (Sec. III-E); the l2 default
-    ignores it."""
+    Eq. 9 refinement (fused single-jit engine, all epochs in one
+    executable) -> activation-profile estimation.  ``key`` seeds the
+    refinement shuffle from the caller's chain (default: ``cfg.seed``).
+    ``sigma_inv`` (pooled within-class activation covariance inverse)
+    supports the optional Mahalanobis decode variant (Sec. III-E); the l2
+    default ignores it."""
     enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
     protos = (class_prototypes(h, y, cfg.n_classes)
               if prototypes is None else prototypes)
@@ -114,9 +129,10 @@ def fit_loghd_model(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
                              method=cfg.codebook_method)
     book_j = jnp.asarray(book)
     bundles = build_bundles(protos, book_j, cfg.k, bipolar=cfg.bipolar_init)
-    bundles = refine_bundles(bundles, h, y, book_j, cfg.k,
-                             epochs=cfg.refine_epochs, lr=cfg.lr,
-                             batch_size=cfg.refine_batch, seed=cfg.seed)
+    bundles = fused_refine_bundles(bundles, h, y, book_j, cfg.k,
+                                   epochs=cfg.refine_epochs, lr=cfg.lr,
+                                   batch_size=cfg.refine_batch,
+                                   seed=cfg.seed, key=key)
     profiles = estimate_profiles(bundles, h, y, cfg.n_classes)
 
     n = cfg.n_bundles
@@ -132,14 +148,17 @@ def fit_hybrid_model(cfg: HybridConfig, enc_cfg: EncoderConfig, x: jax.Array,
                      y: jax.Array, *, enc: Optional[dict] = None,
                      encoded: Optional[jax.Array] = None,
                      prototypes: Optional[jax.Array] = None,
-                     base: Optional[LogHDModel] = None) -> HybridModel:
+                     base: Optional[LogHDModel] = None,
+                     key=None) -> HybridModel:
     """Sparsify a LogHD base model's bundles, re-estimate its profiles.
 
     ``base`` (a fitted ``LogHDModel``) skips retraining LogHD; otherwise
-    one is fitted from ``cfg.loghd`` first."""
+    one is fitted from ``cfg.loghd`` first (``key`` threads through to its
+    refinement shuffle)."""
     if base is None:
         base = fit_loghd_model(cfg.loghd, enc_cfg, x, y, enc=enc,
-                               encoded=encoded, prototypes=prototypes)
+                               encoded=encoded, prototypes=prototypes,
+                               key=key)
     h = (encode_batched(base.enc, x, enc_cfg.kind)
          if encoded is None else encoded)
 

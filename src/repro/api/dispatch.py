@@ -26,13 +26,14 @@ from repro.api.models import (ConventionalModel, HDModel, HybridModel,
 from repro.core.quantize import QTensor
 from repro.kernels import common as kcommon
 from repro.kernels.bundle_sim.ops import bundle_similarity
+from repro.kernels.bundle_update.ops import bundle_update
 from repro.kernels.flip_corrupt.ops import flip_corrupt
 from repro.kernels.loghd_head.ops import loghd_head_logits
 from repro.kernels.profile_decode.ops import profile_decode_scores
 
 __all__ = ["kernels_qualify", "predict_fn", "predict_encoded",
-           "loghd_head_scores", "corrupt_dequant", "corrupt_materialize",
-           "register_cache_clearer", "clear_cache"]
+           "loghd_head_scores", "fused_bundle_update", "corrupt_dequant",
+           "corrupt_materialize", "register_cache_clearer", "clear_cache"]
 
 
 def _l2n(v, axis=-1, eps=1e-12):
@@ -117,6 +118,24 @@ def loghd_head_scores(x: jax.Array, bundles: jax.Array, profiles: jax.Array,
     a = (x @ bundles.T).astype(jnp.float32)                    # (..., n)
     return (2.0 * a @ p.T - jnp.sum(p * p, axis=-1)
             - jnp.sum(a * a, axis=-1, keepdims=True))
+
+
+def fused_bundle_update(m: jax.Array, coeff: jax.Array, h: jax.Array, lr,
+                        use_kernel: Optional[bool] = None) -> jax.Array:
+    """One training minibatch update l2n(m + lr * coeff^T h), dispatched.
+
+    The fit engine's hot scatter-add of per-batch coefficients into
+    bundles/prototypes: the ``bundle_update`` Pallas kernel (one HBM pass,
+    fused row-norm reduction) on compiled TPU backends, the jnp einsum +
+    ``l2_normalize`` expansion otherwise.  Both compute the same math;
+    the two paths differ only in float summation order (allclose, not
+    bitwise)."""
+    if use_kernel is None:
+        use_kernel = kernels_qualify()
+    if use_kernel:
+        return bundle_update(m, coeff, h, lr)
+    delta = jnp.einsum("bn,bd->nd", coeff, h) * lr
+    return _l2n(m + delta)
 
 
 def corrupt_dequant(q: QTensor, p, key: jax.Array,

@@ -40,7 +40,9 @@ class MethodSpec:
     ``make_config(n_classes, **kw)`` builds its hyperparameter dataclass,
     and ``fit(cfg, enc_cfg, x, y, *, enc, encoded, prototypes, base)``
     trains and returns an ``HDModel`` (the built-in families' trainers live
-    in ``repro.api._impl``)."""
+    in ``repro.api._impl``).  Trainers MAY additionally accept ``key=`` to
+    join the caller's PRNG chain; ``HDClassifier.fit`` forwards it only
+    when given, so specs without the keyword keep working."""
     name: str
     model_cls: type
     make_config: Callable[..., Any]       # (n_classes, **kw) -> cfg
@@ -107,13 +109,17 @@ class HDClassifier:
     def fit(self, x: jax.Array, y: jax.Array, *, enc: Optional[dict] = None,
             encoded: Optional[jax.Array] = None,
             prototypes: Optional[jax.Array] = None,
-            base: Optional[HDModel] = None) -> "HDClassifier":
+            base: Optional[HDModel] = None,
+            key: Optional[jax.Array] = None) -> "HDClassifier":
         """Train; `enc`/`encoded`/`prototypes`/`base` share work across
         methods (the paper trains every method from one encoder and one
-        prototype set)."""
+        prototype set).  ``key`` joins the trainer's randomness (LogHD's
+        refinement shuffle) to the caller's PRNG chain; forwarded only when
+        given, so registered specs without the keyword keep working."""
+        kw = {} if key is None else {"key": key}
         model = self.spec.fit(self.cfg, self.enc_cfg, x, y, enc=enc,
                               encoded=encoded, prototypes=prototypes,
-                              base=base)
+                              base=base, **kw)
         return dataclasses.replace(self, model=model)
 
     def with_model(self, model: HDModel) -> "HDClassifier":

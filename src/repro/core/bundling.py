@@ -47,6 +47,18 @@ def symbol_targets(codebook: jax.Array, k: int) -> jax.Array:
     return 2.0 * symbol_weight(jnp.asarray(codebook), k) - 1.0
 
 
+def refine_delta(bundles: jax.Array, h: jax.Array, targets_y: jax.Array,
+                 lr) -> jax.Array:
+    """The raw Eq. 9 minibatch delta, before adding and re-normalizing.
+
+    Exposed separately so the data-parallel training engine can all-reduce
+    per-shard deltas (optionally int8-compressed) before the shared
+    ``l2n(bundles + delta)`` finish."""
+    acts = h @ bundles.T                                 # (B, n) cosine sims
+    err = targets_y - acts                               # (B, n)
+    return jnp.einsum("bn,bd->nd", err, h) * lr
+
+
 def refine_step(bundles: jax.Array, h: jax.Array, targets_y: jax.Array,
                 lr: float) -> jax.Array:
     """One (mini)batched Eq. 9 update.
@@ -59,43 +71,57 @@ def refine_step(bundles: jax.Array, h: jax.Array, targets_y: jax.Array,
     Returns:
       (n, D) updated, re-normalized bundles.
     """
-    acts = h @ bundles.T                                 # (B, n) cosine sims
-    err = targets_y - acts                               # (B, n)
-    delta = jnp.einsum("bn,bd->nd", err, h) * lr
-    return _l2n(bundles + delta)
+    return _l2n(bundles + refine_delta(bundles, h, targets_y, lr))
+
+
+def refine_epoch(bundles: jax.Array, key: jax.Array, h: jax.Array,
+                 targets_y: jax.Array, lr, batch_size: int) -> jax.Array:
+    """One permuted Eq. 9 pass: shuffle, minibatch, scan ``refine_step``.
+
+    ``targets_y`` is the per-example target row ``t(B_y)`` (n, k) — the
+    caller gathers ``symbol_targets(codebook, k)[y]`` once so this body
+    stays a pure array function, shared between the eager loop below and
+    the fused single-jit engine (``repro.api.fit_engine``).  The final
+    partial batch is zero-padded, not dropped: zero query rows contribute
+    zero delta (``refine_step``'s delta carries a factor of h).
+    """
+    from repro.hdc.conventional import pad_batches
+    n = h.shape[0]
+    perm = jax.random.permutation(key, n)
+    hb, tb = pad_batches(h[perm], targets_y[perm], batch_size)
+
+    def step(m, batch):
+        hh, tt = batch
+        return refine_step(m, hh, tt, lr), None
+
+    bundles, _ = jax.lax.scan(step, bundles, (hb, tb))
+    return bundles
 
 
 def refine_bundles(bundles: jax.Array, h: jax.Array, y: jax.Array,
                    codebook: jax.Array, k: int, *, epochs: int,
-                   lr: float, batch_size: int = 1, seed: int = 0) -> jax.Array:
+                   lr: float, batch_size: int = 1, seed: int = 0,
+                   key: jax.Array | None = None) -> jax.Array:
     """Run T epochs of Eq. 9 over a randomly ordered training set.
 
     batch_size=1 reproduces the paper's per-example update exactly
     (Algorithm 1, step 5); larger batches are a standard minibatch
     generalisation used for throughput on long datasets.
+
+    Randomness: pass ``key`` to join the caller's key chain (the typed
+    trainers thread theirs through); the historical ``seed`` default is
+    kept for backward compatibility and means ``jax.random.PRNGKey(seed)``.
     """
     if epochs <= 0:
         return bundles
     targets = symbol_targets(codebook, k)                # (C, n)
     n = h.shape[0]
     bs = max(1, min(batch_size, n))
-    n_batches = max(n // bs, 1)
-    usable = n_batches * bs
-    key = jax.random.PRNGKey(seed)
-
-    def epoch(bundles, key):
-        perm = jax.random.permutation(key, n)[:usable]
-        hb = h[perm].reshape(n_batches, bs, -1)
-        tb = targets[y[perm]].reshape(n_batches, bs, -1)
-
-        def step(m, batch):
-            hh, tt = batch
-            return refine_step(m, hh, tt, lr), None
-
-        bundles, _ = jax.lax.scan(step, bundles, (hb, tb))
-        return bundles
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    targets_y = targets[y]                               # (n_examples, k)
 
     keys = jax.random.split(key, epochs)
     for e in range(epochs):
-        bundles = epoch(bundles, keys[e])
+        bundles = refine_epoch(bundles, keys[e], h, targets_y, lr, bs)
     return bundles

@@ -57,36 +57,83 @@ def class_prototypes(h: jax.Array, y: jax.Array, n_classes: int) -> jax.Array:
     return _l2n(protos)
 
 
+def pad_batches(h: jax.Array, y: jax.Array, batch_size: int):
+    """Zero-pad (h, y) along axis 0 to a whole number of batches.
+
+    Zero query rows are exact no-ops for both the OnlineHD and Eq. 9
+    updates — every delta term carries a factor of h — so zero-row padding
+    IS the tail mask: the final partial batch contributes exactly its real
+    examples and nothing else.  When ``n % batch_size == 0`` no padding is
+    inserted and the reshape is bit-identical to the historical path.
+
+    Returns ``(hb, yb)`` shaped ``(n_batches, batch_size, ...)``; ``y`` may
+    be integer labels ``(n,)`` or per-example target rows ``(n, k)``.
+
+    >>> import jax.numpy as jnp
+    >>> hb, yb = pad_batches(jnp.ones((5, 3)), jnp.arange(5), 2)
+    >>> hb.shape, yb.shape, float(hb[2, 1].sum())
+    ((3, 2, 3), (3, 2), 0.0)
+    """
+    n = h.shape[0]
+    n_batches = -(-n // batch_size)
+    total = n_batches * batch_size
+    if total != n:
+        h = jnp.pad(h, ((0, total - n),) + ((0, 0),) * (h.ndim - 1))
+        y = jnp.pad(y, ((0, total - n),) + ((0, 0),) * (y.ndim - 1))
+    return (h.reshape(n_batches, batch_size, *h.shape[1:]),
+            y.reshape(n_batches, batch_size, *y.shape[1:]))
+
+
+def onlinehd_delta(protos: jax.Array, hh: jax.Array, yy: jax.Array,
+                   lr) -> jax.Array:
+    """The raw OnlineHD minibatch delta, before adding and re-normalizing.
+
+    Exposed separately so the data-parallel training engine can all-reduce
+    per-shard deltas (optionally int8-compressed) before the shared
+    ``l2n(protos + delta)`` finish — summing deltas over shards is exactly
+    the big-batch update."""
+    sims = hh @ protos.T                                       # (B, C)
+    pred = jnp.argmax(sims, axis=-1)
+    wrong = (pred != yy).astype(hh.dtype)
+    s_true = jnp.take_along_axis(sims, yy[:, None], axis=-1)[:, 0]
+    s_pred = jnp.take_along_axis(sims, pred[:, None], axis=-1)[:, 0]
+    # OnlineHD update weights
+    w_pull = wrong * (1.0 - s_true)
+    w_push = wrong * (1.0 - s_pred)
+    onehot_y = jax.nn.one_hot(yy, protos.shape[0], dtype=hh.dtype)
+    onehot_p = jax.nn.one_hot(pred, protos.shape[0], dtype=hh.dtype)
+    delta = jnp.einsum("b,bc,bd->cd", lr * w_pull, onehot_y, hh)
+    delta -= jnp.einsum("b,bc,bd->cd", lr * w_push, onehot_p, hh)
+    return delta
+
+
+def onlinehd_step(protos: jax.Array, hh: jax.Array, yy: jax.Array,
+                  lr) -> jax.Array:
+    """One OnlineHD minibatch update: (C, D), (B, D), (B,) -> (C, D).
+
+    Pulls the true prototype toward misclassified queries and pushes the
+    winning wrong prototype away, scaled by the similarity gap.  Module
+    level so the eager epoch loop and the fused single-jit training engine
+    (``repro.api.fit_engine``) trace the SAME body — key-for-key parity
+    between the two is exact, not approximate.
+    """
+    return _l2n(protos + onlinehd_delta(protos, hh, yy, lr))
+
+
 def onlinehd_epoch(protos: jax.Array, h: jax.Array, y: jax.Array,
                    lr: float, batch_size: int) -> jax.Array:
     """One OnlineHD refinement pass over prototypes in any (sub)space.
 
-    Pulls the true prototype toward misclassified queries and pushes the
-    winning wrong prototype away, scaled by the similarity gap.  The same
-    update serves conventional-HDC refinement and SparseHD retraining in
-    the pruned subspace (the two historically carried duplicate copies).
+    The same update serves conventional-HDC refinement and SparseHD
+    retraining in the pruned subspace (the two historically carried
+    duplicate copies).  The final partial batch is zero-padded rather than
+    dropped (see ``pad_batches``), so every example contributes.
     """
-    n = h.shape[0]
-    n_batches = max(n // batch_size, 1)
-    usable = n_batches * batch_size
-    hb = h[:usable].reshape(n_batches, batch_size, -1)
-    yb = y[:usable].reshape(n_batches, batch_size)
+    hb, yb = pad_batches(h, y, batch_size)
 
     def step(protos, batch):
         hh, yy = batch
-        sims = hh @ protos.T                                       # (B, C)
-        pred = jnp.argmax(sims, axis=-1)
-        wrong = (pred != yy).astype(hh.dtype)
-        s_true = jnp.take_along_axis(sims, yy[:, None], axis=-1)[:, 0]
-        s_pred = jnp.take_along_axis(sims, pred[:, None], axis=-1)[:, 0]
-        # OnlineHD update weights
-        w_pull = wrong * (1.0 - s_true)
-        w_push = wrong * (1.0 - s_pred)
-        onehot_y = jax.nn.one_hot(yy, protos.shape[0], dtype=hh.dtype)
-        onehot_p = jax.nn.one_hot(pred, protos.shape[0], dtype=hh.dtype)
-        delta = jnp.einsum("b,bc,bd->cd", lr * w_pull, onehot_y, hh)
-        delta -= jnp.einsum("b,bc,bd->cd", lr * w_push, onehot_p, hh)
-        return _l2n(protos + delta), None
+        return onlinehd_step(protos, hh, yy, lr), None
 
     protos, _ = jax.lax.scan(step, protos, (hb, yb))
     return protos

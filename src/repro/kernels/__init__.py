@@ -10,6 +10,9 @@
                    at vocabulary scale (C = vocab).
   flip_corrupt   — fused PRNG -> XOR bit-flip -> sign-extend -> dequantize,
                    the fault-sweep trial body in one HBM pass.
+  bundle_update  — fused scatter-add of per-batch training coefficients
+                   into bundles/prototypes + row-norm reduction, the fit
+                   engine's minibatch-update body in one HBM pass.
 
 Each kernel directory holds:
   <name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling

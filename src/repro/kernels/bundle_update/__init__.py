@@ -1,0 +1,2 @@
+from repro.kernels.bundle_update.ops import bundle_update
+from repro.kernels.bundle_update.ref import bundle_update_ref

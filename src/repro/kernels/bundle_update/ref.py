@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the bundle_update kernel.
+
+The exact math the training engine's reference (non-kernel) path computes
+for one minibatch update, written as one expression: accumulate the
+coefficient-weighted queries into the bundles, then re-normalize rows.
+The parity tests sweep (n, B, D) shapes and block sizes against this one
+function (f32 allclose, like the other matmul kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bundle_update_ref(m: jax.Array, c: jax.Array, h: jax.Array,
+                      lr) -> jax.Array:
+    """l2n(m + lr * c^T h): (n, D), (B, n), (B, D) -> (n, D) f32."""
+    u = m.astype(jnp.float32) + lr * jnp.einsum(
+        "bn,bd->nd", c.astype(jnp.float32), h.astype(jnp.float32))
+    return u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-12)

@@ -145,3 +145,87 @@ def test_multipod_mesh_builds():
         assert mesh.shape == {"pod": 2, "data": 2, "model": 2}
         print("OK")
     """))
+
+
+def test_fused_fit_dp_matches_serial():
+    """fused_onlinehd_fit_dp(compress=None): summing per-shard minibatch
+    deltas IS the big-batch update, so the dp fit equals the single-device
+    fused fit run on the interleaved global batch order."""
+    _run(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import fit_engine
+        from repro.hdc.conventional import class_prototypes, l2_normalize
+        mesh = jax.make_mesh((8,), ("data",))
+        n, d, c, bs = 512, 128, 7, 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        h = l2_normalize(jax.random.normal(ks[0], (n, d)))
+        y = jax.random.randint(ks[1], (n,), 0, c)
+        protos = class_prototypes(h, y, c)
+
+        dp = fit_engine.fused_onlinehd_fit_dp(
+            protos, h, y, lr=3e-3, batch_size=bs, epochs=3,
+            mesh=mesh, compress=None)
+
+        # serial equivalent: shard s holds rows [s*64, (s+1)*64); global
+        # batch b interleaves local batch b of every shard
+        local_bs = bs // 8
+        order = np.concatenate([
+            np.concatenate([np.arange(local_bs) + b * local_bs + s * 64
+                            for s in range(8)])
+            for b in range(64 // local_bs)])
+        serial = fit_engine.fused_onlinehd_fit(
+            protos, h[order], y[order], lr=3e-3, batch_size=bs, epochs=3,
+            use_kernel=False)
+        np.testing.assert_allclose(np.asarray(dp), np.asarray(serial),
+                                   rtol=1e-5, atol=1e-6)
+
+        # int8 error-feedback compression stays close to the exact fit
+        dp8 = fit_engine.fused_onlinehd_fit_dp(
+            protos, h, y, lr=3e-3, batch_size=bs, epochs=3,
+            mesh=mesh, compress="int8")
+        np.testing.assert_allclose(np.asarray(dp8), np.asarray(dp),
+                                   rtol=1e-3, atol=1e-3)
+
+        # ragged row count pads to whole shard batches and still runs
+        ragged = fit_engine.fused_onlinehd_fit_dp(
+            protos, h[:500], y[:500], lr=3e-3, batch_size=bs, epochs=1,
+            mesh=mesh, compress=None)
+        assert ragged.shape == protos.shape
+        print("OK")
+    """))
+
+
+def test_fused_refine_dp_reduces_target_error():
+    """fused_refine_bundles_dp: per-shard shuffles differ from the serial
+    key chain, so assert the training effect (Eq. 9 target error drops)
+    rather than bitwise equality."""
+    _run(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import fit_engine
+        from repro.core.bundling import symbol_targets
+        from repro.core.codebook import build_codebook
+        from repro.hdc.conventional import l2_normalize
+        mesh = jax.make_mesh((8,), ("data",))
+        n, d, c = 512, 128, 7
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        h = l2_normalize(jax.random.normal(ks[0], (n, d)))
+        y = jax.random.randint(ks[1], (n,), 0, c)
+        book = jnp.asarray(build_codebook(c, 3, 2, seed=0))
+        m0 = l2_normalize(jax.random.normal(ks[2], (3, d)))
+
+        def err(m):
+            ty = symbol_targets(book, 2)[y]
+            return float(jnp.mean((h @ m.T - ty) ** 2))
+
+        m = fit_engine.fused_refine_bundles_dp(
+            m0, h, y, book, 2, epochs=10, lr=1e-2, batch_size=64,
+            mesh=mesh, compress="int8")
+        assert m.shape == m0.shape
+        assert err(m) < err(m0), (err(m), err(m0))
+        # deterministic in the key
+        m2 = fit_engine.fused_refine_bundles_dp(
+            m0, h, y, book, 2, epochs=10, lr=1e-2, batch_size=64,
+            mesh=mesh, compress="int8")
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(m2))
+        print("OK")
+    """))

@@ -1,0 +1,222 @@
+"""Fused single-jit training engine: exactness, tail handling, retraces.
+
+The engine's contract (api/fit_engine.py) is that the fused scan-over-epochs
+executable is key-for-key BIT-IDENTICAL to the eager epoch loops on the jnp
+path — not just statistically close.  These tests pin that, the zero-pad
+tail fix (the final partial batch used to be dropped), the ``key=``
+threading through the typed trainers, and the one-executable-per-(method,
+shape-bucket) jit-cache discipline mirroring tests/test_fault_models.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import dispatch, fit_engine
+from repro.api.registry import make_classifier
+from repro.core.bundling import (refine_bundles, refine_epoch, refine_step,
+                                 symbol_targets)
+from repro.core.codebook import build_codebook
+from repro.hdc.conventional import (class_prototypes, l2_normalize,
+                                    onlinehd_epoch, onlinehd_step,
+                                    pad_batches)
+
+
+def _data(n=300, d=64, c=7, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    h = l2_normalize(jax.random.normal(ks[0], (n, d)))
+    y = jax.random.randint(ks[1], (n,), 0, c)
+    return h, y, class_prototypes(h, y, c)
+
+
+# ------------------------------------------------------------- tail fix ----
+
+def test_pad_batches_shapes_and_tail():
+    h = jnp.arange(10.0 * 3).reshape(10, 3)
+    y = jnp.arange(10)
+    hb, yb = pad_batches(h, y, 4)
+    assert hb.shape == (3, 4, 3) and yb.shape == (3, 4)
+    # real rows preserved in order, tail zero-padded
+    np.testing.assert_array_equal(hb.reshape(12, 3)[:10], h)
+    np.testing.assert_array_equal(hb[2, 2:], jnp.zeros((2, 3)))
+    np.testing.assert_array_equal(yb[2, 2:], jnp.zeros(2, yb.dtype))
+    # divisible case is a pure reshape
+    hb2, _ = pad_batches(h, y, 5)
+    np.testing.assert_array_equal(hb2.reshape(10, 3), h)
+
+
+def test_onlinehd_epoch_ragged_tail_not_dropped():
+    """n % batch_size != 0: the final partial batch must contribute.
+
+    The padded epoch equals stepping manually zero-padded batches bit for
+    bit (zero rows are exact no-ops: every delta term carries a factor of
+    h, and the padded label rows pair with zero queries), and differs from
+    the historical tail-drop behaviour."""
+    h, y, protos = _data(n=10)
+    # mislabel the tail rows so their OnlineHD update is provably nonzero
+    # (correctly-classified examples contribute zero delta)
+    y = y.at[-2:].set((y[-2:] + 1) % 7)
+    bs = 4
+    got = onlinehd_epoch(protos, h, y, 0.05, bs)
+    hp = jnp.pad(h, ((0, 2), (0, 0)))
+    yp = jnp.pad(y, (0, 2))
+    want = protos
+    for lo in (0, 4, 8):
+        want = onlinehd_step(want, hp[lo:lo + bs], yp[lo:lo + bs], 0.05)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    dropped = protos
+    for lo in (0, 4):
+        dropped = onlinehd_step(dropped, h[lo:lo + bs], y[lo:lo + bs], 0.05)
+    assert not np.allclose(np.asarray(got), np.asarray(dropped))
+
+
+def test_refine_epoch_ragged_tail_not_dropped():
+    h, y, _ = _data(n=10, c=4)
+    book = jnp.asarray(build_codebook(4, 3, 2, seed=0))
+    ty = symbol_targets(book, 2)[y]
+    m = l2_normalize(jax.random.normal(jax.random.PRNGKey(3), (3, 64)))
+    key = jax.random.PRNGKey(7)
+    got = refine_epoch(m, key, h, ty, 0.05, 4)
+    perm = jax.random.permutation(key, 10)
+    hp = jnp.pad(h[perm], ((0, 2), (0, 0)))
+    tp = jnp.pad(ty[perm], ((0, 2), (0, 0)))
+    want = m
+    for lo in (0, 4, 8):
+        want = refine_step(want, hp[lo:lo + 4], tp[lo:lo + 4], 0.05)
+    # scan vs eager python loop reassociate float sums -> allclose, not
+    # bitwise (the bitwise contract is fused-vs-eager, same code bodies)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+    dropped = m
+    for lo in (0, 4):
+        dropped = refine_step(dropped, hp[lo:lo + 4], tp[lo:lo + 4], 0.05)
+    assert not np.allclose(np.asarray(got), np.asarray(dropped))
+
+
+# -------------------------------------------------- fused vs eager exact ----
+
+@pytest.mark.parametrize("n,bs", [(300, 64), (256, 64), (300, 1)])
+def test_fused_onlinehd_key_for_key_exact(n, bs):
+    """Scan-over-epochs in one jit == eager epoch loop, bit for bit."""
+    h, y, protos = _data(n=n)
+    eager = protos
+    for _ in range(3):
+        eager = onlinehd_epoch(eager, h, y, 3e-3, bs)
+    fused = fit_engine.fused_onlinehd_fit(protos, h, y, lr=3e-3,
+                                          batch_size=bs, epochs=3,
+                                          use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(eager))
+
+
+@pytest.mark.parametrize("key_seed", [None, 5])
+def test_fused_refine_key_for_key_exact(key_seed):
+    """In-graph key splitting draws the same threefry stream as the eager
+    host-side split — fused refine is bit-identical, ragged tail and all."""
+    h, y, protos = _data(n=300, c=7)
+    book = jnp.asarray(build_codebook(7, 3, 2, seed=0))
+    m0 = l2_normalize(protos[:3])
+    key = None if key_seed is None else jax.random.PRNGKey(key_seed)
+    eager = refine_bundles(m0, h, y, book, 2, epochs=4, lr=1e-2,
+                           batch_size=64, key=key)
+    fused = fit_engine.fused_refine_bundles(m0, h, y, book, 2, epochs=4,
+                                            lr=1e-2, batch_size=64, key=key,
+                                            use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(eager))
+
+
+def test_fused_kernel_path_allclose():
+    """interpret-mode Pallas step: same math, different summation order."""
+    h, y, protos = _data(n=130)
+    a = fit_engine.fused_onlinehd_fit(protos, h, y, lr=3e-3, batch_size=32,
+                                      epochs=2, use_kernel=False)
+    b = fit_engine.fused_onlinehd_fit(protos, h, y, lr=3e-3, batch_size=32,
+                                      epochs=2, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+    book = jnp.asarray(build_codebook(7, 3, 2, seed=0))
+    m0 = l2_normalize(protos[:3])
+    a = fit_engine.fused_refine_bundles(m0, h, y, book, 2, epochs=2, lr=1e-2,
+                                        batch_size=32, use_kernel=False)
+    b = fit_engine.fused_refine_bundles(m0, h, y, book, 2, epochs=2, lr=1e-2,
+                                        batch_size=32, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_epochs_zero_is_identity():
+    h, y, protos = _data(n=40)
+    out = fit_engine.fused_onlinehd_fit(protos, h, y, lr=1e-2, batch_size=8,
+                                        epochs=0)
+    assert out is protos
+
+
+# ------------------------------------------------------- key= threading ----
+
+def test_refine_bundles_key_joins_seed_chain():
+    h, y, protos = _data(n=120, c=7)
+    book = jnp.asarray(build_codebook(7, 3, 2, seed=0))
+    m0 = l2_normalize(protos[:3])
+    by_seed = refine_bundles(m0, h, y, book, 2, epochs=3, lr=1e-2,
+                             batch_size=16, seed=11)
+    by_key = refine_bundles(m0, h, y, book, 2, epochs=3, lr=1e-2,
+                            batch_size=16, key=jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.asarray(by_seed), np.asarray(by_key))
+    other = refine_bundles(m0, h, y, book, 2, epochs=3, lr=1e-2,
+                           batch_size=16, key=jax.random.PRNGKey(12))
+    assert not np.array_equal(np.asarray(by_seed), np.asarray(other))
+
+
+def test_classifier_fit_threads_key():
+    """HDClassifier.fit(key=) reaches the refinement shuffle: same key ->
+    identical bundles, different key -> different bundles."""
+    h, y, _ = _data(n=150, c=7, d=64)
+    clf = make_classifier("loghd", n_classes=7, in_features=64, dim=256,
+                          refine_epochs=3, refine_batch=16)
+    a = clf.fit(h, y, key=jax.random.PRNGKey(0)).model.bundles
+    b = clf.fit(h, y, key=jax.random.PRNGKey(0)).model.bundles
+    c = clf.fit(h, y, key=jax.random.PRNGKey(1)).model.bundles
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    # no key -> cfg.seed default, still deterministic
+    d1 = clf.fit(h, y).model.bundles
+    d2 = clf.fit(h, y).model.bundles
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+# --------------------------------------------- cache / retrace discipline --
+
+def test_one_executable_per_method_and_shape():
+    """Mirror of tests/test_fault_models.py's zero-retrace check: a grid of
+    fits over lr values and repeated shapes compiles exactly once per
+    (method statics) cache entry, and a second pass adds nothing."""
+    dispatch.clear_cache()
+    assert fit_engine._FIT_JIT_CACHE == {}
+    h, y, protos = _data(n=200, c=7)
+    book = jnp.asarray(build_codebook(7, 3, 2, seed=0))
+    m0 = l2_normalize(protos[:3])
+
+    def grid():
+        for lr in (1e-3, 3e-3, 1e-2):
+            fit_engine.fused_onlinehd_fit(protos, h, y, lr=lr, batch_size=32,
+                                          epochs=2, use_kernel=False)
+            fit_engine.fused_refine_bundles(m0, h, y, book, 2, epochs=2,
+                                            lr=lr, batch_size=32,
+                                            use_kernel=False)
+
+    grid()
+    entries = {k: fn._cache_size() for k, fn in fit_engine._FIT_JIT_CACHE.items()}
+    assert len(entries) == 2, entries
+    assert all(n == 1 for n in entries.values()), entries
+    grid()
+    after = {k: fn._cache_size() for k, fn in fit_engine._FIT_JIT_CACHE.items()}
+    assert after == entries, (entries, after)
+
+
+def test_clear_cache_drops_fit_executables():
+    h, y, protos = _data(n=40)
+    fit_engine.fused_onlinehd_fit(protos, h, y, lr=1e-2, batch_size=8,
+                                  epochs=1, use_kernel=False)
+    assert fit_engine._FIT_JIT_CACHE
+    dispatch.clear_cache()
+    assert fit_engine._FIT_JIT_CACHE == {}

@@ -11,6 +11,8 @@ import pytest
 from repro.core.quantize import dequantize, quantize
 from repro.kernels.bundle_sim.ops import bundle_similarity
 from repro.kernels.bundle_sim.ref import bundle_similarity_ref
+from repro.kernels.bundle_update.ops import bundle_update
+from repro.kernels.bundle_update.ref import bundle_update_ref
 from repro.kernels.flip_corrupt.ops import flip_corrupt
 from repro.kernels.flip_corrupt.ref import flip_corrupt_ref
 from repro.kernels.profile_decode.ops import profile_decode_scores
@@ -194,3 +196,55 @@ def test_flip_corrupt_traced_p_and_seed():
     got = f(jnp.float32(0.13), jnp.int32(42))
     want = flip_corrupt_ref(q.codes, q.scale, 0.13, 42, bits=2)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+BU_SHAPES = [
+    (5, 32, 512),      # tiny, single D tile
+    (26, 100, 1000),   # ISOLET-like C, ragged B and D
+    (3, 7, 130),       # everything ragged and below one tile
+    (128, 64, 2048),   # multiple D tiles, full lane of bundles
+    (26, 64, 10000),   # paper D=10k
+]
+
+
+@pytest.mark.parametrize("n,b,d", BU_SHAPES)
+def test_bundle_update(n, b, d):
+    km, kc, kh = jax.random.split(jax.random.PRNGKey(n + b + d), 3)
+    m = _rand(km, (n, d), jnp.float32)
+    m = m / jnp.linalg.norm(m, axis=-1, keepdims=True)
+    c = _rand(kc, (b, n), jnp.float32)
+    h = _rand(kh, (b, d), jnp.float32)
+    got = bundle_update(m, c, h, 0.01, interpret=True)
+    want = bundle_update_ref(m, c, h, 0.01)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got.shape == (n, d) and got.dtype == jnp.float32
+    # rows come back unit-norm (the fused normalization epilogue)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(got), axis=-1),
+                               np.ones(n), rtol=1e-5)
+
+
+def test_bundle_update_block_shape_invariant():
+    """Different D-tile sizes produce allclose results (accumulation order
+    differs across tiles, so bitwise equality is not expected)."""
+    m = jax.random.normal(jax.random.PRNGKey(0), (26, 1536))
+    m = m / jnp.linalg.norm(m, axis=-1, keepdims=True)
+    c = jax.random.normal(jax.random.PRNGKey(1), (48, 26))
+    h = jax.random.normal(jax.random.PRNGKey(2), (48, 1536))
+    a = bundle_update(m, c, h, 0.05, interpret=True, block_d=256)
+    b = bundle_update(m, c, h, 0.05, interpret=True, block_d=1536)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bundle_update_traced_lr():
+    """lr may be traced (folded into the coefficients, never a static)."""
+    m = jax.random.normal(jax.random.PRNGKey(4), (8, 256))
+    m = m / jnp.linalg.norm(m, axis=-1, keepdims=True)
+    c = jax.random.normal(jax.random.PRNGKey(5), (16, 8))
+    h = jax.random.normal(jax.random.PRNGKey(6), (16, 256))
+    f = jax.jit(lambda lr: bundle_update(m, c, h, lr, interpret=True))
+    for lr in (0.001, 0.1):
+        np.testing.assert_allclose(f(jnp.float32(lr)),
+                                   bundle_update_ref(m, c, h, lr),
+                                   rtol=1e-5, atol=1e-5)
+    assert f._cache_size() == 1
