@@ -1,0 +1,168 @@
+"""Extreme-classification benchmark: class-sharded LogHD at C in the
+millions.
+
+Fits ``make_classifier("loghd", ..., class_sharding=S)`` at C = 2^16 and
+C = 2^20 on the forced-host-device mesh (CI runs this stage under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and records, per C:
+
+  * fit seconds and refine-epoch throughput,
+  * predict queries/sec through the jit dispatch surface,
+  * resident bytes-per-device of the class-sharded leaves vs the ideal
+    C/n_shards split (from ``ShardedLogHDModel.resident_bytes_per_device``),
+  * stored-bytes ratio vs the conventional C x D model,
+  * post-warmup retrace counts across the predict and fit caches.
+
+Appends one record to ``BENCH_extreme.json`` at the repo root (same append
+schema as the other BENCH_*.json trajectories).  Gates (CI fails on
+violation): resident bytes-per-device <= 1.2x ideal at every C, and zero
+post-warmup recompiles across repeated fit/predict cycles.  With fewer than
+2 host devices the bench prints a skip notice and records nothing — the
+sharded layout needs a mesh to mean anything.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.fault_sweep_bench import write_record
+from repro.api import dispatch, fit_engine, make_classifier
+from repro.api import sharded as sharded_mod
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_extreme.json")
+
+RATIO_GATE = 1.2          # max resident-bytes ratio vs the ideal C/S split
+DIM = 256                 # D small: the point is the class axis, not D
+FEATURES = 32
+PREDICT_BATCH = 64
+PREDICT_REPS = 5
+# (C, n_train) — labels drawn uniformly; the bench measures systems
+# behaviour (throughput, residency, retraces), not accuracy
+CASES = ((1 << 16, 2048), (1 << 20, 4096))
+
+
+def _fixture(c: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, FEATURES)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, c, size=n).astype(np.int32))
+    xq = jnp.asarray(rng.normal(size=(PREDICT_BATCH, DIM)).astype(np.float32))
+    return x, y, xq
+
+
+def _fit(c: int, n: int, n_shards: int):
+    x, y, _ = _fixture(c, n)
+    clf = make_classifier("loghd", n_classes=c, in_features=FEATURES,
+                          dim=DIM, refine_epochs=1,
+                          class_sharding=n_shards).fit(x, y)
+    jax.block_until_ready(clf.model.profiles)
+    return clf
+
+
+def _cache_sizes():
+    """Total compiled executables across the fit-side jit caches (the
+    predict surface is tracked separately by the caller via its own
+    ``_cache_size()``)."""
+    return (sum(fn._cache_size()
+                for fn in fit_engine._FIT_JIT_CACHE.values()),
+            sum(fn._cache_size() if hasattr(fn, "_cache_size") else 0
+                for fn in sharded_mod._SHARDED_JIT_CACHE.values()))
+
+
+def run(quick: bool = True):
+    n_devices = len(jax.devices())
+    n_shards = min(8, n_devices)
+    cases = {}
+    retraces_total = 0
+    for c, n in CASES:
+        t0 = time.perf_counter()
+        clf = _fit(c, n, n_shards)
+        fit_s = time.perf_counter() - t0
+        model = clf.model
+        _, _, xq = _fixture(c, n)
+
+        jfn = dispatch.predict_fn(model)
+        jfn(model, xq).block_until_ready()             # warm the executable
+        t0 = time.perf_counter()
+        for _ in range(PREDICT_REPS):
+            jfn(model, xq).block_until_ready()
+        predict_s = (time.perf_counter() - t0) / PREDICT_REPS
+        qps = PREDICT_BATCH / predict_s
+
+        # zero-retrace gate: a second full fit/predict cycle at the same
+        # shapes may not compile anything new anywhere
+        fit_cache0, sh_cache0 = _cache_sizes()
+        predict0 = jfn._cache_size()
+        clf2 = _fit(c, n, n_shards)
+        jfn(clf2.model, xq).block_until_ready()
+        fit_cache1, sh_cache1 = _cache_sizes()
+        retraces = ((fit_cache1 - fit_cache0) + (sh_cache1 - sh_cache0)
+                    + (jfn._cache_size() - predict0))
+        retraces_total += retraces
+
+        mem = model.resident_bytes_per_device()
+        conv_bytes = c * DIM * 4                       # f32 conventional C x D
+        cases[f"2^{c.bit_length() - 1}"] = {
+            "n_classes": c, "n_train": n, "dim": DIM,
+            "n_shards": n_shards,
+            "n_bundles": model.n_bundles,
+            "fit_s": round(fit_s, 3),
+            "fit_examples_per_sec": round(n / fit_s, 1),
+            "predict_qps": round(qps, 1),
+            "predict_batch": PREDICT_BATCH,
+            "max_bytes_per_device": mem["max_bytes_per_device"],
+            "ideal_bytes_per_device": round(mem["ideal_bytes_per_device"]),
+            "bytes_ratio_to_ideal": round(mem["ratio_to_ideal"], 4),
+            "stored_bytes": model.stored_bytes(),
+            "stored_vs_conventional": round(
+                model.stored_bytes() / conv_bytes, 6),
+            "post_warmup_retraces": retraces,
+        }
+    return {
+        "bench": "extreme",
+        "quick": bool(quick),
+        "n_devices": n_devices,
+        "n_shards": n_shards,
+        "ratio_gate": RATIO_GATE,
+        "cases": cases,
+        "post_warmup_retraces": retraces_total,
+        "backend": jax.default_backend(),
+        "unix_time": int(time.time()),
+    }
+
+
+def main(quick: bool = True):
+    if len(jax.devices()) < 2:
+        print("# extreme bench needs >= 2 devices for a class mesh; run "
+              "under XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "(skipping)")
+        return
+    record = run(quick=quick)
+    path = write_record(record, BENCH_JSON)
+    failures = []
+    for name, case in record["cases"].items():
+        print(f"# C={name}: fit {case['fit_s']}s, "
+              f"predict {case['predict_qps']} q/s, "
+              f"{case['max_bytes_per_device'] / 1e6:.1f} MB/device "
+              f"({case['bytes_ratio_to_ideal']}x ideal over "
+              f"{case['n_shards']} shards), "
+              f"stored {case['stored_vs_conventional']:.4%} of conventional, "
+              f"retraces {case['post_warmup_retraces']}")
+        if case["bytes_ratio_to_ideal"] > RATIO_GATE:
+            failures.append(
+                f"C={name} resident bytes {case['bytes_ratio_to_ideal']}x "
+                f"ideal exceeds the {RATIO_GATE}x gate")
+    if record["post_warmup_retraces"] != 0:
+        failures.append(f"{record['post_warmup_retraces']} post-warmup "
+                        "retraces (expected 0)")
+    print(f"# trajectory appended to {path}")
+    if failures:
+        raise SystemExit("extreme bench gate failed: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

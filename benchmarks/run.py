@@ -21,6 +21,11 @@
                        eager epoch loops per method; appends to
                        BENCH_fit.json, gated >=5x with accuracy z-tests
                        and zero post-warmup retraces
+  extreme_bench      — class-sharded LogHD at C in {2^16, 2^20} on the
+                       forced-8-device mesh; appends fit/predict throughput
+                       and resident bytes-per-device to BENCH_extreme.json,
+                       gated <= 1.2x the ideal C/n_shards split and zero
+                       post-warmup recompiles (skips below 2 devices)
 
 `python -m benchmarks.run` (or `--quick`) runs the QUICK suite (the 1-core
 CPU container cannot finish the full grids in reasonable time); `--full`
@@ -45,10 +50,10 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (breakpoint_surface, fault_sweep_bench,
-                            fig3_bitflip, fig4_dim_quant, fig5_alphabet,
-                            fig6_hybrid, fit_bench, kernels_bench,
-                            serve_bench, table2_efficiency)
+    from benchmarks import (breakpoint_surface, extreme_bench,
+                            fault_sweep_bench, fig3_bitflip, fig4_dim_quant,
+                            fig5_alphabet, fig6_hybrid, fit_bench,
+                            kernels_bench, serve_bench, table2_efficiency)
     suites = {
         "table2": table2_efficiency,
         "kernels": kernels_bench,
@@ -56,6 +61,7 @@ def main() -> None:
         "breakpoint_surface": breakpoint_surface,
         "serve": serve_bench,
         "fit": fit_bench,
+        "extreme": extreme_bench,
         "fig5": fig5_alphabet,
         "fig4": fig4_dim_quant,
         "fig6": fig6_hybrid,

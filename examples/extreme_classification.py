@@ -5,7 +5,9 @@ C = 4096 synthetic classes, D = 8192: the conventional model stores 33.6M
 words; LogHD with k=2, n=14 stores 0.115M (292x smaller), and a query costs
 14 similarity lanes + a 4096x14 decode instead of 4096 full-width dots.
 (At the assigned LM-head scale — C=151936, D=2048 — the same math gives the
-loghd head used by launch/dryrun.py.)
+loghd head used by launch/dryrun.py.  Past single-device C, pass
+``class_sharding=S`` to shard the profile rows over S devices — see
+``benchmarks/extreme_bench.py`` for C = 2^20 on a forced 8-device mesh.)
 
     PYTHONPATH=src python examples/extreme_classification.py
 """
@@ -35,6 +37,18 @@ def make_data(c=4096, f=256, d_per_class=24, n_test=2048, seed=0):
     return x_tr, y_tr.astype(np.int32), x_te, y_te.astype(np.int32)
 
 
+def _timed_predict(clf, h_te, reps=3):
+    """Steady-state queries/sec: warm the compiled executable first, then
+    time completed work (block_until_ready — otherwise the clock reads
+    async dispatch, not compute)."""
+    jax.block_until_ready(clf.predict_encoded(h_te))          # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(clf.predict_encoded(h_te))
+    dt = (time.perf_counter() - t0) / reps
+    return h_te.shape[0] / dt
+
+
 def main():
     c, d = 4096, 8192
     x_tr, y_tr, x_te, y_te = make_data(c=c)
@@ -48,27 +62,28 @@ def main():
     conv = make_classifier("conventional", c, enc_cfg=enc_cfg)
     conv = conv.fit(jnp.asarray(x_tr), jnp.asarray(y_tr),
                     prototypes=protos, enc=enc, encoded=h_tr)
-    t0 = time.time()
+    qps_conv = _timed_predict(conv, h_te)
     acc_conv = conv.accuracy(h_te, y_te)
-    t_conv = time.time() - t0
 
     n_min = min_bundles(c, 2)
     log = make_classifier("loghd", c, enc_cfg=enc_cfg, k=2, extra_bundles=2,
                           refine_epochs=0, codebook_method="stratified")
     log = log.fit(jnp.asarray(x_tr), jnp.asarray(y_tr),
                   prototypes=protos, enc=enc, encoded=h_tr)
-    t0 = time.time()
+    qps_log = _timed_predict(log, h_te)
     acc = log.accuracy(h_te, y_te)
-    t_log = time.time() - t0
 
+    # stored bytes straight from the models (QTensor-aware residency
+    # accounting), not hand-computed word counts
+    conv_bytes = conv.model.stored_bytes()
+    log_bytes = log.model.stored_bytes()
     n = log.model.n_bundles
-    conv_words = c * d
-    log_words = n * d + c * n
-    print(f"conventional: {conv_words/1e6:.1f}M words, acc={acc_conv:.3f}, "
-          f"predict {t_conv*1e3:.0f} ms")
-    print(f"LogHD k=2 n={n} (min {n_min}): {log_words/1e6:.3f}M words "
-          f"({conv_words/log_words:.0f}x smaller), acc={acc:.3f}, "
-          f"predict {t_log*1e3:.0f} ms")
+    print(f"conventional: {conv_bytes/1e6:.1f} MB stored, acc={acc_conv:.3f}, "
+          f"{qps_conv:.0f} queries/s")
+    print(f"LogHD k=2 n={n} (min {n_min}): {log_bytes/1e6:.3f} MB stored "
+          f"({conv_bytes/log_bytes:.0f}x smaller, "
+          f"{log_bytes/conv_bytes:.2%} of baseline), acc={acc:.3f}, "
+          f"{qps_log:.0f} queries/s")
 
 
 if __name__ == "__main__":

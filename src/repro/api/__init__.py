@@ -32,6 +32,11 @@ Module map
   _impl.py         The built-in families' trainers (``fit_loghd_model``
                    etc.), composing the algorithm math in ``repro.core`` /
                    ``repro.hdc`` into typed models behind the registry.
+  sharded.py       Class-sharded LogHD for extreme C: profile/codebook rows
+                   over a "class" mesh axis, bundles replicated, predict by
+                   sharded argmax-combine.  Reached via
+                   ``make_classifier("loghd", ..., class_sharding=S)``;
+                   ``ShardedLogHDModel`` checkpoints like any family.
 
 Quick start
 -----------
@@ -58,11 +63,12 @@ from repro.api.models import (MODEL_CLASSES, ConventionalModel, HDModel,
                               HybridModel, LogHDModel, SparseHDModel)
 from repro.api.registry import (HDClassifier, MethodSpec, available_methods,
                                 get_method, make_classifier, register_method)
+from repro.api.sharded import ShardedLogHDModel, shard_loghd_model
 from repro.core.evaluate import sweep_under_flips
 
 __all__ = [
     "HDModel", "ConventionalModel", "SparseHDModel", "LogHDModel",
-    "HybridModel", "MODEL_CLASSES",
+    "HybridModel", "ShardedLogHDModel", "shard_loghd_model", "MODEL_CLASSES",
     "MethodSpec", "register_method", "get_method", "available_methods",
     "make_classifier", "HDClassifier",
     "predict_fn", "predict_encoded", "kernels_qualify", "loghd_head_scores",

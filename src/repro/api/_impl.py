@@ -119,7 +119,18 @@ def fit_loghd_model(cfg: LogHDConfig, enc_cfg: EncoderConfig, x: jax.Array,
     refinement shuffle from the caller's chain (default: ``cfg.seed``).
     ``sigma_inv`` (pooled within-class activation covariance inverse)
     supports the optional Mahalanobis decode variant (Sec. III-E); the l2
-    default ignores it."""
+    default ignores it.
+
+    ``cfg.class_sharding > 1`` (or ``data_sharding > 1``) hands the whole
+    fit to the class-sharded estimator in ``repro.api.sharded`` — same
+    pipeline, with profile/codebook rows sharded over a "class" mesh axis
+    and no C x D array ever materialized."""
+    if (getattr(cfg, "class_sharding", 1) > 1
+            or getattr(cfg, "data_sharding", 1) > 1):
+        from repro.api.sharded import fit_loghd_sharded
+        return fit_loghd_sharded(cfg, enc_cfg, x, y, enc=enc,
+                                 encoded=encoded, prototypes=prototypes,
+                                 base=base, key=key)
     enc, h = _encoder_and_encodings(enc_cfg, x, enc, encoded)
     protos = (class_prototypes(h, y, cfg.n_classes)
               if prototypes is None else prototypes)

@@ -89,7 +89,8 @@ def predict_fn(model: HDModel,
     """Cached jit-compiled ``(model, h) -> labels`` for `model`'s family."""
     metric = getattr(model, "metric", "l2")
     if use_kernels is None:
-        use_kernels = kernels_qualify(metric)
+        use_kernels = (kernels_qualify(metric)
+                       and getattr(model, "kernel_dispatch", True))
     return _predict_jit(type(model), metric, bool(use_kernels))
 
 

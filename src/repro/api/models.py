@@ -73,6 +73,10 @@ class HDModel:
     method: ClassVar[str]
     stored_leaves: ClassVar[tuple]
     aux_fields: ClassVar[tuple] = ()
+    # subclasses whose predict math the Pallas kernels do NOT implement
+    # (e.g. the class-sharded LogHD variant) set this False so the dispatch
+    # layer never routes them onto a kernel path built for the parent class
+    kernel_dispatch: ClassVar[bool] = True
 
     # ------------------------------------------------------------- pytree --
     def tree_flatten(self):

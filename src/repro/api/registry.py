@@ -175,7 +175,11 @@ def make_classifier(name: str, n_classes: int,
     Either pass a full ``enc_cfg`` or ``in_features`` (+ optional ``dim``,
     ``encoder_kind``) for the default shared encoder.  ``method_kw`` goes to
     the family's config (e.g. ``k=3, extra_bundles=2`` for loghd,
-    ``sparsity=0.5`` for sparsehd).
+    ``sparsity=0.5`` for sparsehd).  For extreme C, loghd additionally takes
+    ``class_sharding=S`` (and optionally ``data_sharding``): the fit routes
+    to the class-sharded estimator in ``repro.api.sharded`` and returns a
+    ``ShardedLogHDModel`` whose predictions are bitwise identical to the
+    unsharded path.
 
     >>> clf = make_classifier("loghd", n_classes=26, in_features=617)
     >>> clf.method, clf.cfg.n_bundles

@@ -52,6 +52,10 @@ class LogHDConfig:
                                      # point (weights t(s) instead of g(s));
                                      # beyond-paper, see bundling.build_bundles
     seed: int = 0
+    class_sharding: int = 1          # >1: shard profile/codebook rows over a
+                                     # "class" mesh axis (repro.api.sharded)
+    data_sharding: int = 1           # >1: also shard refine examples over a
+                                     # "data" axis (fused_refine_bundles_dp)
 
     @property
     def n_bundles(self) -> int:

@@ -23,19 +23,35 @@ def activations(bundles: jax.Array, h: jax.Array) -> jax.Array:
     return h @ _l2n(bundles).T
 
 
+def segment_profile_means(acts: jax.Array, ids: jax.Array,
+                          n_rows: int) -> jax.Array:
+    """Per-row activation means via segment-sum: (B, n), (B,) -> (n_rows, n).
+
+    The shared inner kernel of profile estimation: rows whose id is outside
+    ``[0, n_rows)`` are dropped (jax scatter-add semantics) and rows with no
+    contributing examples come out zero.  Per-output-row results are bitwise
+    independent of ``n_rows`` and of any constant shift applied to ``ids``
+    — the scatter adds contributions in example order either way — which is
+    what lets the class-sharded estimator (``repro.api.sharded``) compute
+    each shard's profile rows locally yet bitwise match the unsharded path.
+    """
+    sums = jax.ops.segment_sum(acts, ids, num_segments=n_rows)
+    counts = jax.ops.segment_sum(jnp.ones(ids.shape, acts.dtype), ids,
+                                 num_segments=n_rows)
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
 def estimate_profiles(bundles: jax.Array, h: jax.Array, y: jax.Array,
                       n_classes: int) -> jax.Array:
     """P_c = mean_{x in class c} A(x): -> (C, n).
 
     Classes absent from the batch get a zero profile (they can never win
     nearest-profile decoding against observed classes, which is the sane
-    degenerate behaviour).
+    degenerate behaviour).  Runs on ``segment_profile_means`` — no (B, C)
+    one-hot transient, so it holds up at extreme C.
     """
     acts = activations(bundles, h)                        # (B, n)
-    onehot = jax.nn.one_hot(y, n_classes, dtype=acts.dtype)
-    sums = jnp.einsum("bc,bn->cn", onehot, acts)
-    counts = jnp.sum(onehot, axis=0)[:, None]
-    return sums / jnp.maximum(counts, 1.0)
+    return segment_profile_means(acts, y, n_classes)
 
 
 def decode_profiles(profiles: jax.Array, acts: jax.Array,

@@ -52,8 +52,9 @@ def class_prototypes(h: jax.Array, y: jax.Array, n_classes: int) -> jax.Array:
     >>> class_prototypes(h, jnp.array([0, 0, 1, 1]), 2).shape
     (2, 4)
     """
-    onehot = jax.nn.one_hot(y, n_classes, dtype=h.dtype)          # (N, C)
-    protos = jnp.einsum("nc,nd->cd", onehot, h)
+    # segment-sum instead of a one-hot einsum: no (N, C) transient, so the
+    # superposition holds up at extreme C (class-sharded LogHD fits)
+    protos = jax.ops.segment_sum(h, y, num_segments=n_classes)
     return _l2n(protos)
 
 

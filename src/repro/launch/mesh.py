@@ -22,3 +22,19 @@ def make_debug_mesh(devices=None):
     devices = devices if devices is not None else jax.devices()
     return jax.make_mesh((len(devices), 1), ("data", "model"),
                          devices=devices)
+
+
+def make_class_mesh(n_class_shards: int, n_data_shards: int = 1,
+                    devices=None):
+    """("data", "class") mesh for the sharded extreme-classification
+    estimator (``repro.api.sharded``): profile/codebook rows shard over
+    "class", fit examples optionally shard over "data".  Uses the first
+    ``n_data_shards * n_class_shards`` devices."""
+    devices = devices if devices is not None else jax.devices()
+    need = int(n_data_shards) * int(n_class_shards)
+    if need < 1 or len(devices) < need:
+        raise ValueError(
+            f"class mesh needs {n_data_shards} x {n_class_shards} = {need} "
+            f"devices, have {len(devices)}")
+    return jax.make_mesh((int(n_data_shards), int(n_class_shards)),
+                         ("data", "class"), devices=devices[:need])

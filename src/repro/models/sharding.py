@@ -132,6 +132,19 @@ def tree_shardings(tree, mesh: Mesh) -> dict:
         tree, tree_specs(tree))
 
 
+# ---- classifier class-axis layout ----------------------------------------
+# The sharded extreme-classification estimator (repro.api.sharded) uses a
+# ("data", "class") mesh from launch.mesh.make_class_mesh.  Row-major leaves
+# with a leading class axis (profiles (C, n), codebook (C, n)) shard their
+# rows over "class"; everything O(n * D) (the bundle hypervectors) stays
+# replicated.  These two specs ARE the layout — sharded.py imports them so
+# fit placement, predict shard_map signatures, and the resident-bytes bench
+# can never disagree about it.
+
+CLASS_SHARDED = P("class", None)     # (C, ...) leaves: rows over "class"
+CLASS_REPLICATED = P()               # n- or (n, D)-sized leaves: replicated
+
+
 # ---- activation sharding hints -------------------------------------------
 # XLA SPMD propagates most activation shardings from the weight shardings,
 # but fails across some reshape chains (notably (B,S,H*hd) -> (B,S,KV,G,hd)

@@ -65,6 +65,70 @@ def test_vocab_scale_codebook():
     assert cb.verify_unique(book)
 
 
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_codebook_unique_at_extreme_c(k):
+    """Distinct class codes up to C = 2^20 for every supported alphabet."""
+    c = 1 << 20
+    n = cb.min_bundles(c, k)
+    assert k ** n >= c
+    book = cb.build_codebook(c, n, k, seed=0)
+    assert book.shape == (c, n)
+    assert book.min() >= 0 and book.max() <= k - 1
+    assert len(np.unique(book, axis=0)) == c
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_min_bundles_exact_at_boundaries(k):
+    """min_bundles is EXACTLY ceil(log_k C) at C = k^n and k^n + 1 — the
+    values float log is one ulp away from getting wrong."""
+    for n in range(1, 21):
+        c = k ** n
+        if c > (1 << 22):
+            break
+        assert cb.min_bundles(c, k) == n, (c, k)
+        assert cb.min_bundles(c + 1, k) == n + 1, (c, k)
+    assert cb.min_bundles(1, k) == 1
+    assert cb.min_bundles(2, k) == 1
+
+
+def test_sharded_rows_match_full_build():
+    """build_codebook_rows over any shard boundary — even or ragged —
+    concatenates back to exactly the full build, for every method."""
+    for method in ("stratified", "greedy"):
+        for c, n_shards in ((4096, 8), (1000, 8), (13, 2)):
+            n = cb.min_bundles(c, 2) + 1
+            full = cb.build_codebook(c, n, 2, method=method, seed=7)
+            c_loc = -(-c // n_shards)
+            parts = [cb.build_codebook_rows(
+                         c, n, 2, s * c_loc, min((s + 1) * c_loc, c),
+                         method=method, seed=7)
+                     for s in range(n_shards)]
+            np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_stratified_balanced_per_symbol_under_sharded_rows():
+    """With C = k^n (full enumeration) every bundle position must see each
+    symbol exactly C/k times — and the balance must survive assembling the
+    codebook from per-shard row slices."""
+    c, k = 1 << 12, 2
+    n = cb.min_bundles(c, k)            # 12: codes are a permutation of all
+    parts = [cb.build_codebook_rows(c, n, k, s * (c // 8), (s + 1) * (c // 8),
+                                    method="stratified", seed=0)
+             for s in range(8)]
+    book = np.concatenate(parts)
+    assert len(np.unique(book, axis=0)) == c
+    for j in range(n):
+        counts = np.bincount(book[:, j], minlength=k)
+        np.testing.assert_array_equal(counts, np.full(k, c // k))
+    # ragged C (not a power of k): still near-balanced per symbol
+    c2 = 3000
+    book2 = cb.build_codebook(c2, cb.min_bundles(c2, k) + 1, k,
+                              method="stratified", seed=0)
+    for j in range(book2.shape[1]):
+        counts = np.bincount(book2[:, j], minlength=k)
+        assert counts.max() - counts.min() <= 0.2 * c2, (j, counts)
+
+
 # ----------------------------------------------------- bundling/profiles ---
 
 def _toy(c=6, d=512, n_per=30, seed=0):

@@ -2,7 +2,9 @@
 (the main pytest process must keep seeing 1 device).
 
 Covers: MoE shard_map EP == single-device reference; sharded train step;
-sequence-sharded flash-decode == plain decode; int8 gradient compression."""
+sequence-sharded flash-decode == plain decode; int8 gradient compression;
+class-sharded LogHD fit/predict bitwise parity, registry/checkpoint wiring,
+jit-cache discipline, and the extreme-C smoke."""
 
 import os
 import subprocess
@@ -229,3 +231,155 @@ def test_fused_refine_dp_reduces_target_error():
         np.testing.assert_array_equal(np.asarray(m), np.asarray(m2))
         print("OK")
     """))
+
+
+def test_sharded_loghd_bitwise_parity():
+    """Class-sharded LogHD fit AND predict are bitwise identical to the
+    single-device path — across 1/2/8-way shardings, an uneven C % n_shards
+    remainder (C=13), an even split (C=16), and both decode metrics."""
+    _run(textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.api._impl import fit_loghd_model
+        from repro.api.sharded import fit_loghd_sharded, shard_loghd_model
+        from repro.core.loghd import LogHDConfig
+        from repro.hdc.encoders import EncoderConfig, fit_encoder
+        rng = np.random.default_rng(0)
+        F, N, D = 24, 260, 128
+        for C, metric in ((13, "l2"), (16, "l2"), (13, "cos")):
+            x = jnp.asarray(rng.normal(size=(N, F)).astype(np.float32))
+            y = jnp.asarray(rng.integers(0, C, size=N).astype(np.int32))
+            enc_cfg = EncoderConfig(F, D, "cos")
+            enc, h = fit_encoder(enc_cfg, x)
+            base = LogHDConfig(n_classes=C, refine_epochs=3, metric=metric)
+            ref = fit_loghd_model(base, enc_cfg, x, y, enc=enc, encoded=h)
+            ht = jnp.asarray(rng.normal(size=(37, D)).astype(np.float32))
+            pref = np.asarray(ref.predict_encoded(ht))
+            for S in (1, 2, 8):
+                import dataclasses
+                cfg = dataclasses.replace(base, class_sharding=S)
+                sh = fit_loghd_sharded(cfg, enc_cfg, x, y, enc=enc,
+                                       encoded=h)
+                np.testing.assert_array_equal(np.asarray(ref.bundles),
+                                              np.asarray(sh.bundles))
+                np.testing.assert_array_equal(np.asarray(ref.profiles),
+                                              np.asarray(sh.profiles)[:C])
+                np.testing.assert_array_equal(
+                    pref, np.asarray(sh.predict_encoded(ht)))
+                # re-laying a fitted single-device model is also bitwise
+                rs = shard_loghd_model(ref, S)
+                np.testing.assert_array_equal(
+                    pref, np.asarray(rs.predict_encoded(ht)))
+        print("OK")
+    """))
+
+
+def test_sharded_loghd_registry_and_checkpoint():
+    """make_classifier("loghd", ..., class_sharding=8) routes to the
+    sharded estimator; save_model/load_model round-trips the layout; the
+    jit predict surface and the gathered export agree bitwise."""
+    _run(textwrap.dedent("""
+        import tempfile, numpy as np, jax, jax.numpy as jnp
+        from repro.api import (dispatch, load_model, make_classifier,
+                               save_model, ShardedLogHDModel)
+        rng = np.random.default_rng(1)
+        C, F, N, D = 13, 24, 260, 128
+        x = jnp.asarray(rng.normal(size=(N, F)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, C, size=N).astype(np.int32))
+        clf = make_classifier("loghd", n_classes=C, in_features=F, dim=D,
+                              refine_epochs=3, class_sharding=8).fit(x, y)
+        assert isinstance(clf.model, ShardedLogHDModel)
+        assert clf.model.class_sharding == 8
+        assert clf.model.n_classes == C
+        xt = jnp.asarray(rng.normal(size=(29, F)).astype(np.float32))
+        p = np.asarray(clf.predict(xt))
+
+        d = tempfile.mkdtemp()
+        save_model(d, 0, clf.model)
+        m2 = load_model(d)
+        assert isinstance(m2, ShardedLogHDModel)
+        assert (m2.class_sharding, m2.n_classes_real) == (8, C)
+        np.testing.assert_array_equal(p, np.asarray(
+            clf.with_model(m2).predict(xt)))
+
+        # jit surface and plain gathered export agree with the eager path
+        ht = jnp.asarray(rng.normal(size=(29, D)).astype(np.float32))
+        pe = np.asarray(clf.model.predict_encoded(ht))
+        np.testing.assert_array_equal(
+            pe, np.asarray(dispatch.predict_encoded(clf.model, ht)))
+        np.testing.assert_array_equal(
+            pe, np.asarray(clf.model.gathered().predict_encoded(ht)))
+        # accounting uses the REAL C, not the padded row count
+        assert clf.model.model_bits(8) == clf.model.gathered().model_bits(8)
+        print("OK")
+    """))
+
+
+def test_sharded_loghd_cache_discipline():
+    """One executable per (shard layout, batch bucket) on the jit predict
+    surface: a batch ladder compiles once per shape, re-running it (and
+    re-fitting) compiles nothing new; the fit caches stay put too."""
+    _run(textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.api import dispatch, make_classifier
+        from repro.api import fit_engine, sharded
+        rng = np.random.default_rng(2)
+        C, F, N, D = 16, 24, 260, 128
+        x = jnp.asarray(rng.normal(size=(N, F)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, C, size=N).astype(np.int32))
+
+        def fit(S):
+            return make_classifier("loghd", n_classes=C, in_features=F,
+                                   dim=D, refine_epochs=2,
+                                   class_sharding=S).fit(x, y)
+
+        ladder = [1, 8, 64]
+        models = {S: fit(S).model for S in (2, 4)}
+        jfn = dispatch.predict_fn(models[2])
+        assert jfn is dispatch.predict_fn(models[4])  # one surface, same key
+        before = jfn._cache_size()
+        for S, m in models.items():
+            for b in ladder:
+                ht = jnp.asarray(rng.normal(size=(b, D)).astype(np.float32))
+                jfn(m, ht).block_until_ready()
+        grew = jfn._cache_size() - before
+        assert grew == len(models) * len(ladder), grew
+
+        fit_caches = (len(fit_engine._FIT_JIT_CACHE),
+                      len(sharded._SHARDED_JIT_CACHE))
+        # repeat the whole ladder and refit both layouts: ZERO new traces
+        models2 = {S: fit(S).model for S in (2, 4)}
+        for S, m in models2.items():
+            for b in ladder:
+                ht = jnp.asarray(rng.normal(size=(b, D)).astype(np.float32))
+                jfn(m, ht).block_until_ready()
+        assert jfn._cache_size() - before == grew
+        assert (len(fit_engine._FIT_JIT_CACHE),
+                len(sharded._SHARDED_JIT_CACHE)) == fit_caches
+        print("OK")
+    """))
+
+
+def test_sharded_loghd_extreme_smoke():
+    """C = 2^16 over 8 class shards: fits without any C x D array, memory
+    splits ~1/n_shards (<= 1.2x ideal), predictions stay in range (the
+    2^20 point runs in benchmarks/extreme_bench.py)."""
+    _run(textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.api import make_classifier, ShardedLogHDModel
+        rng = np.random.default_rng(3)
+        C, F, N, D = 1 << 16, 32, 2048, 256
+        x = jnp.asarray(rng.normal(size=(N, F)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, C, size=N).astype(np.int32))
+        clf = make_classifier("loghd", n_classes=C, in_features=F, dim=D,
+                              refine_epochs=1, class_sharding=8).fit(x, y)
+        m = clf.model
+        assert isinstance(m, ShardedLogHDModel)
+        info = m.resident_bytes_per_device()
+        assert info["ratio_to_ideal"] <= 1.2, info
+        # every device holds a real (not replicated) slice of the rows
+        assert info["max_bytes_per_device"] * 8 <= info["total_bytes"] * 1.01
+        ht = jnp.asarray(rng.normal(size=(64, D)).astype(np.float32))
+        p = np.asarray(m.predict_encoded(ht))
+        assert p.shape == (64,) and (0 <= p).all() and (p < C).all()
+        print("OK")
+    """), timeout=900)
